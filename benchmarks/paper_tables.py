@@ -1,0 +1,195 @@
+"""Benchmarks reproducing the paper's tables/figures.
+
+One function per table/figure; each returns (rows, derived) where rows are
+CSV-ready dicts and derived holds the headline numbers compared against the
+paper's claims. ``benchmarks.run`` aggregates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.energy import EnergyModel
+from repro.core.placement import build_lut
+from repro.core.system import (default_t_slice_ns, energy_savings_table,
+                               run_baseline, run_hh_pim)
+
+RHO = 4.0   # benchmark default weight-reuse factor (DESIGN.md SS.2)
+
+PAPER_PEAK_MS = {          # SS.IV.B: SRAM+MRAM peak / MRAM-only peak per inf.
+    "efficientnet_b0": (3.106, 4.450),
+    "mobilenet_v2": (2.571, 3.684),
+    "resnet_18": (32.087, 45.974),
+}
+
+PAPER_FIG5_CASE1 = {"baseline": 86.23, "hetero": 78.7, "hybrid": 66.5}
+PAPER_FIG5_CASE2 = {"baseline": 41.46, "hetero": 3.72, "hybrid": 39.69}
+PAPER_AVG = {"baseline": 60.43, "hetero": 36.3, "hybrid": 48.58}
+PAPER_TABLE6 = {   # ES vs (baseline, hetero, hybrid)
+    "case3_periodic_spike": (72.01, 55.78, 54.09),
+    "case4_periodic_spike_frequent": (61.46, 38.38, 47.60),
+    "case5_pulsing": (48.94, 16.89, 42.10),
+    "case6_random": (59.28, 34.14, 50.52),
+}
+PAPER_FIG6_OPT_SAVING = 43.17
+
+
+def table3_latency() -> Tuple[List[Dict], Dict]:
+    """Table III + SS.IV.B: model peak-performance inference times."""
+    rows, derived = [], {}
+    for rho in (1.0, RHO):
+        for m in sp.TINYML_MODELS.values():
+            em = EnergyModel(sp.hh_pim(), m, rho=rho)
+            t_s = em.task_cost(em.peak_placement(True)).t_task_ns / 1e6
+            t_m = em.task_cost(em.peak_placement(False)).t_task_ns / 1e6
+            ps, pm = PAPER_PEAK_MS[m.name]
+            rows.append({"model": m.name, "rho": rho,
+                         "peak_sram_ms": round(t_s, 3),
+                         "paper_sram_ms": ps,
+                         "peak_mram_ms": round(t_m, 3),
+                         "paper_mram_ms": pm,
+                         "sram_dev_pct": round(100 * (t_s / ps - 1), 1),
+                         "mram_dev_pct": round(100 * (t_m / pm - 1), 1)})
+            if rho == 1.0:
+                derived[f"{m.name}_sram_dev_pct"] = rows[-1]["sram_dev_pct"]
+    # qualitative claim: SRAM peak beats MRAM peak everywhere
+    derived["sram_faster_than_mram_everywhere"] = all(
+        r["peak_sram_ms"] < r["peak_mram_ms"] for r in rows)
+    return rows, derived
+
+
+def table5_power() -> Tuple[List[Dict], Dict]:
+    """Table V: per-op dynamic energy + per-slice static by space."""
+    m = sp.EFFICIENTNET_B0
+    em = EnergyModel(sp.hh_pim(), m, rho=RHO)
+    rows = []
+    for s in sp.hh_pim().spaces:
+        rows.append({
+            "space": s.name,
+            "op_ns": round(s.op_ns(RHO), 3),
+            "op_pj": round(s.op_pj(RHO), 1),
+            "static_mw_total": round(s.static_mw_total, 2),
+            "weight_time_ns": round(em.weight_time_ns(s), 2),
+            "weight_energy_pj": round(em.weight_energy_pj(s), 1),
+        })
+    derived = {"lp_sram_cheapest_dynamic":
+               min(rows, key=lambda r: r["op_pj"])["space"] == "lp_sram",
+               "lp_mram_cheapest_static":
+               min(rows, key=lambda r: r["static_mw_total"])["space"]
+               == "lp_mram"}
+    return rows, derived
+
+
+def fig6_placement_sweep() -> Tuple[List[Dict], Dict]:
+    """Fig. 6: memory utilization + E_task across t_constraint."""
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, RHO)
+    lut = build_lut(sp.hh_pim(), m, t_slice_ns=T, n_points=64, rho=RHO)
+    em = EnergyModel(sp.hh_pim(), m, rho=RHO)
+    peak = em.peak_placement(True)
+    rows = []
+    seq = []
+    for e in lut.entries:
+        if not e.feasible:
+            continue
+        used = tuple(sorted(k for k, v in e.placement.items() if v > 0))
+        if not seq or seq[-1] != used:
+            seq.append(used)
+        # unoptimized reference: keep the peak placement at this window
+        tc = em.task_cost(peak)
+        e_unopt = tc.e_dyn_task_pj + em.static_energy_pj(
+            peak, e.t_constraint_ns, tc.t_cluster_ns)
+        rows.append({"t_constraint_ms": round(e.t_constraint_ns / 1e6, 3),
+                     **{k: e.placement.get(k, 0) for k in
+                        ("hp_mram", "hp_sram", "lp_mram", "lp_sram")},
+                     "e_task_uj": round(e.e_task_pj * 1e-6, 1),
+                     "e_unopt_uj": round(e_unopt * 1e-6, 1)})
+    last = rows[-1]
+    opt_saving = 100 * (1 - last["e_task_uj"] / last["e_unopt_uj"])
+    derived = {
+        "placement_sequence": " -> ".join("+".join(u) for u in seq),
+        "relaxed_region_saving_pct": round(opt_saving, 2),
+        "paper_claim_pct": PAPER_FIG6_OPT_SAVING,
+        "ends_lp_mram_only": last["lp_mram"] == m.n_params,
+    }
+    return rows, derived
+
+
+def fig5_energy_savings() -> Tuple[List[Dict], Dict]:
+    """Fig. 5: savings vs 3 comparison PIMs across 6 scenarios x 3 models."""
+    rows = []
+    avgs = {"baseline": [], "hetero": [], "hybrid": []}
+    for m in sp.TINYML_MODELS.values():
+        tab = energy_savings_table(m, rho=RHO, lut_points=48)
+        for scen, r in tab.items():
+            rows.append({"model": m.name, "scenario": scen,
+                         "vs_baseline_pct": round(r["baseline"], 2),
+                         "vs_hetero_pct": round(r["hetero"], 2),
+                         "vs_hybrid_pct": round(r["hybrid"], 2)})
+            for k in avgs:
+                avgs[k].append(r[k])
+    case1 = [r for r in rows if r["scenario"] == "case1_low_constant"]
+    derived = {
+        "avg_vs_baseline_pct": round(float(np.mean(avgs["baseline"])), 2),
+        "avg_vs_hetero_pct": round(float(np.mean(avgs["hetero"])), 2),
+        "avg_vs_hybrid_pct": round(float(np.mean(avgs["hybrid"])), 2),
+        "paper_avg": PAPER_AVG,
+        "best_case1_vs_baseline": max(r["vs_baseline_pct"] for r in case1),
+        "paper_case1": PAPER_FIG5_CASE1,
+        "positive_everywhere": all(r["vs_baseline_pct"] > 0
+                                   and r["vs_hetero_pct"] > 0
+                                   and r["vs_hybrid_pct"] > 0
+                                   for r in rows),
+    }
+    return rows, derived
+
+
+def table6_cases() -> Tuple[List[Dict], Dict]:
+    """Table VI: Cases 3-6 energy savings (model = ResNet-18, the paper's
+    highest-savings benchmark)."""
+    tab = energy_savings_table(sp.RESNET_18, rho=RHO, lut_points=48)
+    rows = []
+    dev = []
+    for scen, paper in PAPER_TABLE6.items():
+        r = tab[scen]
+        ours = (r["baseline"], r["hetero"], r["hybrid"])
+        rows.append({"scenario": scen,
+                     "vs_baseline_pct": round(ours[0], 2),
+                     "vs_hetero_pct": round(ours[1], 2),
+                     "vs_hybrid_pct": round(ours[2], 2),
+                     "paper_baseline": paper[0],
+                     "paper_hetero": paper[1], "paper_hybrid": paper[2]})
+        dev.extend(abs(a - b) for a, b in zip(ours, paper))
+    derived = {"mean_abs_dev_pp": round(float(np.mean(dev)), 2),
+               "max_abs_dev_pp": round(float(np.max(dev)), 2)}
+    return rows, derived
+
+
+def fig4_scheduler_latency() -> Tuple[List[Dict], Dict]:
+    """Fig. 4 scenarios through the runtime: deadline adherence (<= 2T)."""
+    rows = []
+    misses = 0
+    for m in (sp.EFFICIENTNET_B0,):
+        for scen in workloads.SCENARIOS:
+            res = run_hh_pim(m, scen, rho=RHO, lut_points=48)
+            moved = sum(r.moved_weights for r in res.reports)
+            rows.append({"model": m.name, "scenario": scen,
+                         "energy_uj": round(res.energy_uj, 1),
+                         "deadline_misses": res.deadline_miss,
+                         "weights_moved": moved})
+            misses += res.deadline_miss
+    return rows, {"total_deadline_misses": misses}
+
+
+ALL = {
+    "table3_latency": table3_latency,
+    "table5_power": table5_power,
+    "fig6_placement_sweep": fig6_placement_sweep,
+    "fig5_energy_savings": fig5_energy_savings,
+    "table6_cases": table6_cases,
+    "fig4_scheduler_latency": fig4_scheduler_latency,
+}

@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract, where
+``us_per_call`` is the wall time of producing the table and ``derived``
+holds the headline numbers compared to the paper's claims. Row-level detail
+is written to benchmarks/results/<name>.csv.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import time
+from pathlib import Path
+
+from benchmarks import paper_tables
+
+
+def main() -> None:
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in paper_tables.ALL.items():
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        if rows:
+            with open(out_dir / f"{name}.csv", "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+                w.writeheader()
+                w.writerows(rows)
+        print(f"{name},{us:.0f},{json.dumps(derived)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Fig. 6 sweep for all three TinyML benchmarks + rho sensitivity.
+
+Shows how the optimal placement and E_task evolve with t_constraint for
+EfficientNet-B0 / MobileNetV2 / ResNet-18, and how the weight-reuse factor
+rho moves the LP-MRAM-only crossover (DESIGN.md SS.2 modeling note).
+
+Run:  PYTHONPATH=src python examples/placement_sweep.py
+"""
+from repro.core import spaces as sp
+from repro.core.placement import build_lut
+from repro.core.system import default_t_slice_ns
+
+
+def sweep(model: sp.ModelSpec, rho: float) -> None:
+    T = default_t_slice_ns(model, rho)
+    lut = build_lut(sp.hh_pim(), model, t_slice_ns=T, n_points=32, rho=rho)
+    print(f"-- {model.name} (rho={rho}, T={T/1e6:.2f} ms)")
+    seen = None
+    for e in lut.entries:
+        if not e.feasible:
+            continue
+        key = tuple(sorted(k for k, v in e.placement.items() if v))
+        if key != seen:
+            seen = key
+            share = {k: f"{100*v/model.n_params:.0f}%"
+                     for k, v in e.placement.items() if v}
+            print(f"   t_c >= {e.t_constraint_ns/1e6:7.2f} ms  "
+                  f"E_task {e.e_task_pj*1e-6:9.1f} uJ  {share}")
+
+
+def main() -> None:
+    for model in sp.TINYML_MODELS.values():
+        sweep(model, rho=4.0)
+        print()
+    print("== rho sensitivity (EfficientNet-B0): the LP-MRAM-only regime "
+          "appears once weight fetches amortize over >=2 MACs ==")
+    for rho in (1.0, 2.0, 4.0, 16.0):
+        sweep(sp.EFFICIENTNET_B0, rho)
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Render EXPERIMENTS.md SS.Dry-run and SS.Roofline tables from the JSON
+artifacts. Usage: PYTHONPATH=src python experiments/render_tables.py"""
+import json
+from pathlib import Path
+
+HERE = Path(__file__).parent
+
+
+def dryrun_table() -> str:
+    rows = []
+    for f in sorted(HERE.glob("dryrun/*.json")):
+        d = json.loads(f.read_text())
+        arch, shape, mesh = d["cell"].split("__")
+        if d["status"] == "skipped":
+            rows.append((arch, shape, mesh, "skipped", "-", "-", "-", "-"))
+            continue
+        mem = d.get("memory", {})
+        per_dev = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0)) / 2 ** 30
+        coll = d.get("collectives", {}).get("total", 0) / 2 ** 30
+        rows.append((arch, shape, mesh, d["status"],
+                     f"{d.get('compile_s', 0):.1f}s",
+                     f"{per_dev:.2f}", f"{coll:.2f}",
+                     d.get("optimizer", "-") if d["kind"] == "train"
+                     else ("tp" if d.get("tp_only_params") else "fsdp")))
+    out = ["| arch | shape | mesh | status | compile | GiB/dev | coll GiB/dev | sharding/opt |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append("| " + " | ".join(str(x) for x in r) + " |")
+    return "\n".join(out)
+
+
+def roofline_table(path: str) -> str:
+    rows = json.loads((HERE / path).read_text())
+    out = ["| arch | shape | compute_s | memory_s | collective_s | dominant"
+           " | frac | useful |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | "
+                       f"skipped | - | - |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Dry-run matrix\n")
+    print(dryrun_table())
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table("roofline_single.json"))

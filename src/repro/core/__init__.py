@@ -1,0 +1,15 @@
+"""Core HH-PIM library: the paper's primary contribution.
+
+  spaces     - hardware constants (Tables I/III/IV/V) and arch builders
+  energy     - timing/energy model of placements
+  placement  - Algorithms 1+2 (verbatim DP) + closed-form solver + LUT
+  scheduler  - time-slice runtime (+ straggler feedback)
+  workloads  - Fig. 4 scenarios
+  baselines  - Baseline-/Heterogeneous-/Hybrid-PIM comparison policies
+  system     - end-to-end scenario simulation (Fig. 5 / Table VI)
+"""
+from repro.core import (baselines, energy, placement, scheduler, spaces,
+                        system, workloads)
+
+__all__ = ["baselines", "energy", "placement", "scheduler", "spaces",
+           "system", "workloads"]

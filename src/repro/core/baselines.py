@@ -1,0 +1,44 @@
+"""Comparison-group processors (Table I) and their fixed placement policies."""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.core import spaces as sp
+from repro.core.energy import EnergyModel, Placement
+from repro.core.scheduler import FixedPlacementScheduler
+
+
+def baseline_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
+    """Baseline-PIM: 8 HP modules, all weights in (128 kB) SRAM."""
+    arch = sp.baseline_pim()
+    return arch, {"hp_sram": model.n_params}
+
+
+def hetero_policy(model: sp.ModelSpec, rho: float = 1.0
+                  ) -> Tuple[sp.PIMArch, Placement]:
+    """Heterogeneous-PIM: 4 HP + 4 LP modules, SRAM-only; weights split to
+    balance the two clusters' makespans (its best fixed operating point)."""
+    arch = sp.hetero_pim()
+    em = EnergyModel(arch, model, rho=rho)
+    return arch, em.peak_placement(sram_only=True)
+
+
+def hybrid_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
+    """Hybrid-PIM: 8 HP modules; weights in MRAM, SRAM as I/O buffer."""
+    arch = sp.hybrid_pim()
+    return arch, {"hp_mram": model.n_params}
+
+
+def make_baseline_scheduler(kind: str, model: sp.ModelSpec, *,
+                            t_slice_ns: float, rho: float = 1.0
+                            ) -> FixedPlacementScheduler:
+    if kind == "baseline":
+        arch, pl = baseline_policy(model)
+    elif kind == "hetero":
+        arch, pl = hetero_policy(model, rho)
+    elif kind == "hybrid":
+        arch, pl = hybrid_policy(model)
+    else:
+        raise ValueError(kind)
+    return FixedPlacementScheduler(arch, model, t_slice_ns=t_slice_ns,
+                                   placement=pl, rho=rho)

@@ -1,0 +1,461 @@
+"""Optimal weight-data placement for HH-PIM (paper SS.III).
+
+Three solvers, cross-validated by the test-suite:
+
+  * :func:`dp_min_energy`        - Algorithm 1, verbatim bottom-up DP
+                                   (per-cluster, integer time ticks).
+  * :func:`combine_clusters`     - Algorithm 2, combining the per-cluster
+                                   tables over (k_hp, k_lp = K - k_hp).
+  * :class:`ClosedFormSolver`    - beyond-paper fast path: because per-space
+                                   (t_i, e_i) are uniform across weights, the
+                                   per-cluster optimum lies at an endpoint of
+                                   the feasible interval; exact, O(K) per
+                                   t-point, and able to include the
+                                   volatility-aware static terms that the
+                                   paper folds into its measured results.
+
+The LUT (:class:`PlacementLUT`) is built once at application init (paper:
+Algorithms 1+2 "performed only once during the application initialization
+phase") and consulted per time slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import spaces as sp
+from repro.core.energy import EnergyModel, Placement
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 - verbatim DP (per cluster)
+# ---------------------------------------------------------------------------
+
+
+def dp_min_energy(t_items: Sequence[int], e_items: Sequence[float],
+                  T: int, K: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Bottom-up DP of Eq. (2) / Algorithm 1.
+
+    Args:
+      t_items: integer per-item time cost of each storage space (ticks).
+      e_items: per-item energy cost of each storage space (pJ).
+      T: time-constraint horizon in ticks.
+      K: number of items (weights / weight groups) to place.
+
+    Returns:
+      dp:    (n+1, T+1, K+1) float array; ``dp[i, t, k]`` = min energy to
+             place exactly ``k`` items in the first ``i`` spaces within ``t``.
+      count: (n+1, T+1, K+1) int array tracing items taken in space ``i``
+             at the optimum (paper's ``count`` path variable).
+    """
+    n = len(t_items)
+    assert n == len(e_items)
+    dp = np.full((n + 1, T + 1, K + 1), INF, dtype=np.float64)
+    count = np.zeros((n + 1, T + 1, K + 1), dtype=np.int32)
+    dp[:, :, 0] = 0.0
+    for i in range(1, n + 1):
+        ti, ei = int(t_items[i - 1]), float(e_items[i - 1])
+        dp[i] = dp[i - 1]        # default: carry forward (t_i*k > t branch)
+        count[i] = 0
+        if ti > T:
+            continue
+        for t in range(ti, T + 1):
+            # take one more item in space i (vectorized over k)
+            cand = dp[i, t - ti, :-1] + ei
+            take = cand < dp[i, t, 1:]
+            dp[i, t, 1:] = np.where(take, cand, dp[i, t, 1:])
+            count[i, t, 1:] = np.where(take, count[i, t - ti, :-1] + 1,
+                                       count[i, t, 1:])
+    return dp, count
+
+
+def backtrace(dp: np.ndarray, count: np.ndarray,
+              t_items: Sequence[int], t: int, k: int) -> List[int]:
+    """Recover per-space item counts ``x_i`` from the DP tables."""
+    n = dp.shape[0] - 1
+    x = [0] * n
+    i = n
+    while k > 0 and i > 0:
+        c = int(count[i, t, k])
+        x[i - 1] = c
+        t -= c * int(t_items[i - 1])
+        k -= c
+        i -= 1
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 - combine per-cluster tables
+# ---------------------------------------------------------------------------
+
+
+def combine_clusters(dp_hp: np.ndarray, dp_lp: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Algorithm 2: for every t, find ``k_hp`` minimizing
+    ``dp_hp[t, k_hp] + dp_lp[t, K - k_hp]``.
+
+    Args:
+      dp_hp, dp_lp: final-layer tables of shape (T+1, K+1)
+        (i.e. ``dp[n/2]`` of each cluster).
+
+    Returns:
+      (min_energy[T+1], k_opt_hp[T+1]); infeasible t rows are +inf / -1.
+    """
+    T1, K1 = dp_hp.shape
+    assert dp_lp.shape == (T1, K1)
+    total = dp_hp + dp_lp[:, ::-1]          # k_lp = K - k_hp
+    k_opt = np.argmin(total, axis=1)
+    min_e = total[np.arange(T1), k_opt]
+    k_opt = np.where(np.isinf(min_e), -1, k_opt)
+    return min_e, k_opt
+
+
+# ---------------------------------------------------------------------------
+# Closed-form per-cluster solver (beyond-paper fast path, includes statics)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ClusterSolution:
+    energy_pj: np.ndarray      # (K+1,) min energy for k = 0..K
+    x_mram: np.ndarray         # (K+1,) weights in the cluster's MRAM
+    busy_ns: np.ndarray        # (K+1,) cluster busy time at optimum
+
+
+class ClosedFormSolver:
+    """Exact per-cluster optimum for uniform per-weight costs.
+
+    For ``k`` weights split ``(x_m, x_s = k - x_m)`` between MRAM and SRAM,
+    time and dynamic energy are linear in ``x_m``; the static terms are a
+    step function of {x_m > 0, x_s > 0}; so the optimum over each of the four
+    usage-subsets lies at an interval endpoint.
+    """
+
+    def __init__(self, em: EnergyModel, group: int = 1):
+        self.em = em
+        self.group = group
+
+    def _space_vectors(self, cluster: sp.ClusterSpec):
+        mram = sram = None
+        for s in cluster.spaces:
+            if s.mem.kind == "mram":
+                mram = s
+            else:
+                sram = s
+        return mram, sram
+
+    def solve_cluster(self, cluster: sp.ClusterSpec, K: int,
+                      t_budget_ns: float, static_window_ns: float
+                      ) -> ClusterSolution:
+        em, g = self.em, self.group
+        mram, sram = self._space_vectors(cluster)
+        k = np.arange(K + 1, dtype=np.float64)       # in groups
+        best_e = np.full(K + 1, INF)
+        best_xm = np.zeros(K + 1, dtype=np.int64)
+        best_busy = np.zeros(K + 1)
+
+        tw_s = em.weight_time_ns(sram) * g
+        ew_s = em.weight_energy_pj(sram) * g
+        cap_s = sram.capacity_weights // g
+        if mram is not None:
+            tw_m = em.weight_time_ns(mram) * g
+            ew_m = em.weight_energy_pj(mram) * g
+            cap_m = mram.capacity_weights // g
+
+        def consider(x_m: np.ndarray) -> None:
+            """Evaluate split (x_m, k - x_m); update running best."""
+            x_s = k - x_m
+            valid = (x_m >= 0) & (x_s >= 0) & (x_s <= cap_s)
+            if mram is not None:
+                valid &= x_m <= cap_m
+            busy = (x_m * (tw_m if mram is not None else 0.0) + x_s * tw_s)
+            valid &= busy <= t_budget_ns + 1e-9
+            e = x_m * (ew_m if mram is not None else 0.0) + x_s * ew_s
+            # statics: SRAM-on-holding for the window; MRAM/IO/PE while busy
+            e = e + np.where(x_s > 0, sram.static_mw_total * static_window_ns,
+                             sram.static_mw_total * busy)
+            if mram is not None:
+                e = e + np.where(x_m > 0, mram.static_mw_total * busy, 0.0)
+            e = e + cluster.pe_static_mw_total * busy
+            e = np.where(valid, e, INF)
+            upd = e < best_e
+            best_e[upd] = e[upd]
+            best_xm[upd] = x_m[upd].astype(np.int64)
+            best_busy[upd] = busy[upd]
+
+        zeros = np.zeros(K + 1)
+        if mram is None:
+            consider(zeros)                          # all in SRAM
+        else:
+            consider(zeros)                          # all SRAM
+            consider(k.copy())                       # all MRAM
+            # mixed: feasible x_m interval endpoints given the time budget.
+            #   busy(x_m) = x_m*tw_m + (k-x_m)*tw_s <= t_budget
+            if abs(tw_m - tw_s) < 1e-12:
+                pass                                 # linear in x_m is flat
+            elif tw_m > tw_s:
+                xm_hi = np.floor((t_budget_ns - k * tw_s) / (tw_m - tw_s))
+                consider(np.clip(xm_hi, 0, k))
+                consider(np.clip(xm_hi - 1, 0, k))   # guard rounding
+                consider(np.minimum(np.ones(K + 1), k))
+                consider(np.maximum(k - 1, zeros))
+            else:
+                xm_lo = np.ceil((k * tw_s - t_budget_ns) / (tw_s - tw_m))
+                consider(np.clip(xm_lo, 0, k))
+                consider(np.clip(xm_lo + 1, 0, k))
+                consider(np.minimum(np.ones(K + 1), k))
+                consider(np.maximum(k - 1, zeros))
+            # capacity endpoints
+            consider(np.minimum(k, float(cap_m)))
+            consider(np.maximum(k - float(cap_s), zeros))
+        best_e[0] = 0.0
+        best_busy[0] = 0.0
+        best_xm[0] = 0
+        return ClusterSolution(best_e, best_xm, best_busy)
+
+
+# ---------------------------------------------------------------------------
+# LUT builder (paper: init-time Algorithms 1+2 -> allocation_state)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LUTEntry:
+    t_constraint_ns: float
+    placement: Placement
+    e_task_pj: float            # model-predicted per-task energy
+    t_task_ns: float
+    feasible: bool
+
+
+def _peak_entry(em: EnergyModel, static_window_ns: Optional[float] = None
+                ) -> LUTEntry:
+    """Exact (ungrouped) minimal-makespan entry - the paper's green dot."""
+    pl = em.peak_placement(sram_only=True)
+    tc = em.task_cost(pl)
+    window = static_window_ns if static_window_ns is not None else tc.t_task_ns
+    e_task = tc.e_dyn_task_pj + em.static_energy_pj(pl, window,
+                                                    tc.t_cluster_ns)
+    return LUTEntry(tc.t_task_ns, pl, float(e_task), tc.t_task_ns, True)
+
+
+def _insert_entry(entries: List[LUTEntry], e: LUTEntry) -> List[LUTEntry]:
+    out = [x for x in entries if abs(x.t_constraint_ns - e.t_constraint_ns)
+           > 1e-6]
+    out.append(e)
+    out.sort(key=lambda x: x.t_constraint_ns)
+    return out
+
+
+@dataclasses.dataclass
+class PlacementLUT:
+    arch_name: str
+    model_name: str
+    entries: List[LUTEntry]
+
+    def lookup(self, t_constraint_ns: float) -> LUTEntry:
+        """Largest grid point <= t_constraint (placement remains feasible)."""
+        best: Optional[LUTEntry] = None
+        tol = t_constraint_ns * 1e-9 + 1e-3   # relative + absolute (ns)
+        for e in self.entries:
+            if e.t_constraint_ns <= t_constraint_ns + tol and e.feasible:
+                best = e
+        if best is None:
+            # infeasible budget: fall back to the fastest placement we have
+            for e in self.entries:
+                if e.feasible:
+                    return e
+            raise RuntimeError("LUT has no feasible entries")
+        return best
+
+    @property
+    def min_feasible_t_ns(self) -> float:
+        for e in self.entries:
+            if e.feasible:
+                return e.t_constraint_ns
+        return INF
+
+
+def _counts_to_placement(arch: sp.PIMArch, model: sp.ModelSpec,
+                         counts: Mapping[str, int], group: int) -> Placement:
+    """Scale group counts back to weights; absorb rounding in largest slot."""
+    pl = {k: int(v) * group for k, v in counts.items()}
+    diff = model.n_params - sum(pl.values())
+    if diff:
+        kmax = max(pl, key=lambda k: pl[k])
+        pl[kmax] += diff
+    return pl
+
+
+def auto_resolution(model: sp.ModelSpec, t_slice_ns: float, *,
+                    budget_fraction: float = 0.01,
+                    cost_per_cell_ns: float = 25.0,
+                    n_spaces: int = 4) -> Tuple[int, int]:
+    """Paper SS.III.B: limit optimization resolution so the init-time LUT
+    build costs at most ``budget_fraction`` of one time slice.
+
+    Algorithm 1 is O(n * T * K); with a measured per-cell cost of
+    ~``cost_per_cell_ns`` (vectorized numpy on the edge-class core), choose
+    (n_points, k_groups) maximizing resolution within the budget.
+
+    Returns (n_points, k_groups).
+    """
+    budget_cells = max(t_slice_ns * budget_fraction / cost_per_cell_ns, 64)
+    # keep the T:K aspect ratio ~8:1 (time needs finer resolution than
+    # group count - placements are piecewise constant in k)
+    import numpy as _np
+    k = int(_np.sqrt(budget_cells / (8.0 * n_spaces)))
+    k_groups = int(min(max(k, 8), model.n_params))
+    n_points = int(min(max(budget_cells / (n_spaces * k_groups), 8), 512))
+    return n_points, k_groups
+
+
+def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
+              t_slice_ns: float, n_points: int = 64, rho: float = 1.0,
+              method: str = "closed_form", k_groups: int = 256,
+              static_window: str = "t_constraint",
+              em: Optional[EnergyModel] = None) -> PlacementLUT:
+    """Construct ``allocation_state`` - the init-time placement LUT.
+
+    ``method="closed_form"`` uses :class:`ClosedFormSolver` (exact, with
+    statics); ``method="dp"`` runs Algorithms 1+2 verbatim on the dynamic
+    energies and evaluates the resulting placements under the full model.
+    An explicit ``em`` (e.g. with straggler ``time_scale``) overrides the
+    default model.
+    """
+    em = em or EnergyModel(arch, model, rho=rho)
+    K = model.n_params
+    group = max(1, math.ceil(K / k_groups))
+    Kg = math.ceil(K / group)
+    t_grid = np.linspace(t_slice_ns / n_points, t_slice_ns, n_points)
+    # always include the exact peak-performance point (the paper's green
+    # dot), otherwise full-load lookups land on a coarser, slower entry.
+    t_peak = em.task_cost(em.peak_placement(sram_only=True)).t_task_ns
+    if t_peak <= t_slice_ns:
+        t_grid = np.unique(np.concatenate([t_grid, [t_peak]]))
+
+    pl_peak = em.peak_placement(sram_only=True)
+    tc_peak = em.task_cost(pl_peak)
+
+    def _fallback_entry(t_c: float, window: float) -> LUTEntry:
+        """Grid point infeasible at group granularity but >= the exact peak
+        time: fall back to the exact peak placement."""
+        e_task = tc_peak.e_dyn_task_pj + em.static_energy_pj(
+            pl_peak, window, tc_peak.t_cluster_ns)
+        return LUTEntry(float(t_c), dict(pl_peak), float(e_task),
+                        tc_peak.t_task_ns, True)
+
+    entries: List[LUTEntry] = []
+    if method == "closed_form":
+        solver = ClosedFormSolver(em, group=group)
+        for t_c in t_grid:
+            window = t_c if static_window == "t_constraint" else t_slice_ns
+            sols = {c.name: solver.solve_cluster(c, Kg, t_c, window)
+                    for c in arch.clusters}
+            if len(arch.clusters) == 2:
+                hp, lp = (sols[c.name] for c in arch.clusters)
+                tot = hp.energy_pj + lp.energy_pj[::-1]
+                k_hp = int(np.argmin(tot))
+                feasible = bool(np.isfinite(tot[k_hp]))
+                counts: Dict[str, int] = {}
+                if feasible:
+                    k_lp = Kg - k_hp
+                    for cname, ksel in ((arch.clusters[0].name, k_hp),
+                                        (arch.clusters[1].name, k_lp)):
+                        sol = sols[cname]
+                        xm = int(sol.x_mram[ksel])
+                        cl = arch.cluster(cname)
+                        for s in cl.spaces:
+                            counts[s.name] = (xm if s.mem.kind == "mram"
+                                              else ksel - xm)
+            else:
+                (cname, sol), = sols.items()
+                feasible = bool(np.isfinite(sol.energy_pj[Kg]))
+                counts = {}
+                if feasible:
+                    xm = int(sol.x_mram[Kg])
+                    cl = arch.cluster(cname)
+                    for s in cl.spaces:
+                        counts[s.name] = (xm if s.mem.kind == "mram"
+                                          else Kg - xm)
+            if feasible:
+                pl = _counts_to_placement(arch, model, counts, group)
+                tc = em.task_cost(pl)
+                window = t_c if static_window == "t_constraint" else t_slice_ns
+                e_task = tc.e_dyn_task_pj + em.static_energy_pj(
+                    pl, window, tc.t_cluster_ns)
+                entries.append(LUTEntry(float(t_c), pl, float(e_task),
+                                        tc.t_task_ns, True))
+            else:
+                window = t_c if static_window == "t_constraint" else t_slice_ns
+                if t_c >= tc_peak.t_task_ns:
+                    entries.append(_fallback_entry(t_c, window))
+                else:
+                    entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
+        entries = _insert_entry(entries, _peak_entry(em))
+        return PlacementLUT(arch.name, model.name, entries)
+
+    if method != "dp":
+        raise ValueError(method)
+
+    # -- verbatim Algorithm 1 + 2 path ------------------------------------
+    tick_ns = t_slice_ns / 2048.0
+    T = 2048
+    tables = {}
+    t_items_by_cluster = {}
+    for c in arch.clusters:
+        # ceil => DP never underestimates a placement's true execution time
+        t_items = [max(1, int(math.ceil(em.weight_time_ns(s) * group
+                                        / tick_ns - 1e-9)))
+                   for s in c.spaces]
+        e_items = [em.weight_energy_pj(s) * group for s in c.spaces]
+        dp, count = dp_min_energy(t_items, e_items, T, Kg)
+        tables[c.name] = (dp, count)
+        t_items_by_cluster[c.name] = t_items
+    for t_c in t_grid:
+        t_ticks = int(t_c / tick_ns)
+        if len(arch.clusters) == 2:
+            (n0, (dp0, cnt0)), (n1, (dp1, cnt1)) = tables.items()
+            min_e, k_opt = combine_clusters(dp0[-1][t_ticks:t_ticks + 1],
+                                            dp1[-1][t_ticks:t_ticks + 1])
+            feasible = k_opt[0] >= 0 and np.isfinite(min_e[0])
+            counts = {}
+            if feasible:
+                k_hp = int(k_opt[0])
+                xs0 = backtrace(dp0, cnt0, t_items_by_cluster[n0], t_ticks,
+                                k_hp)
+                xs1 = backtrace(dp1, cnt1, t_items_by_cluster[n1], t_ticks,
+                                Kg - k_hp)
+                for cname, xs in ((n0, xs0), (n1, xs1)):
+                    for s, x in zip(arch.cluster(cname).spaces, xs):
+                        counts[s.name] = x
+        else:
+            (n0, (dp0, cnt0)), = tables.items()
+            feasible = np.isfinite(dp0[-1][t_ticks, Kg])
+            counts = {}
+            if feasible:
+                xs0 = backtrace(dp0, cnt0, t_items_by_cluster[n0], t_ticks,
+                                Kg)
+                for s, x in zip(arch.cluster(n0).spaces, xs0):
+                    counts[s.name] = x
+        if feasible:
+            pl = _counts_to_placement(arch, model, counts, group)
+            tc = em.task_cost(pl)
+            window = t_c if static_window == "t_constraint" else t_slice_ns
+            e_task = tc.e_dyn_task_pj + em.static_energy_pj(
+                pl, window, tc.t_cluster_ns)
+            entries.append(LUTEntry(float(t_c), pl, float(e_task),
+                                    tc.t_task_ns, True))
+        else:
+            window = t_c if static_window == "t_constraint" else t_slice_ns
+            if t_c >= tc_peak.t_task_ns:
+                entries.append(_fallback_entry(t_c, window))
+            else:
+                entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
+    entries = _insert_entry(entries, _peak_entry(em))
+    return PlacementLUT(arch.name, model.name, entries)

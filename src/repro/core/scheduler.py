@@ -1,0 +1,170 @@
+"""Time-slice scheduler: the runtime half of the paper's SS.III strategy.
+
+Tasks generated during slice ``s-1`` are buffered and must complete inside
+slice ``s`` (operational latency <= 2T). Per slice the scheduler derives
+``t_constraint = (T - movement_overhead) / n_tasks``, consults the placement
+LUT, migrates weights if the optimum changed, and executes the backlog.
+
+The same class doubles as the straggler-mitigation feedback loop of the
+TPU-serving adaptation: an observed per-cluster slowdown factor rescales the
+effective per-weight times before lookup, so a degraded pool automatically
+receives a smaller shard next slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import spaces as sp
+from repro.core.energy import EnergyModel, Placement
+from repro.core.placement import PlacementLUT, build_lut
+
+
+@dataclasses.dataclass
+class SliceReport:
+    slice_idx: int
+    n_tasks: int
+    t_constraint_ns: float
+    placement: Placement
+    moved_weights: int
+    t_move_ns: float
+    e_move_pj: float
+    t_exec_ns: float             # n_tasks * t_task
+    e_dyn_pj: float
+    e_static_pj: float
+    deadline_met: bool
+
+    @property
+    def energy_pj(self) -> float:
+        return self.e_dyn_pj + self.e_static_pj + self.e_move_pj
+
+
+class TimeSliceScheduler:
+    def __init__(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
+                 t_slice_ns: float, rho: float = 1.0,
+                 lut: Optional[PlacementLUT] = None,
+                 initial_placement: Optional[Placement] = None,
+                 lut_points: int = 64):
+        self.arch = arch
+        self.model = model
+        self.t_slice_ns = float(t_slice_ns)
+        self.rho = rho
+        self.lut_points = lut_points
+        self.em = EnergyModel(arch, model, rho=rho)
+        self._lut_cache: Dict[tuple, PlacementLUT] = {}
+        if lut is not None:
+            self._lut_cache[self._slowdown_key()] = lut
+        self.placement: Placement = dict(
+            initial_placement or self.em.peak_placement(sram_only=True))
+        self.slowdown: Dict[str, float] = {c.name: 1.0
+                                           for c in self.arch.clusters}
+        self._idx = 0
+
+    # -- straggler feedback ------------------------------------------------
+    def observe_slowdown(self, cluster: str, factor: float) -> None:
+        """Report that `cluster` currently runs `factor`x slower than spec.
+
+        The next slice re-solves placement against the degraded timing model
+        (LUT rebuilt and cached per slowdown signature), so the straggling
+        pool automatically receives a smaller weight shard.
+        """
+        if factor < 1.0:
+            raise ValueError("slowdown factor must be >= 1")
+        self.slowdown[cluster] = float(factor)
+        self.em = EnergyModel(self.arch, self.model, rho=self.rho,
+                              time_scale=self.slowdown)
+
+    def _slowdown_key(self) -> tuple:
+        return tuple(sorted((c, round(f, 3))
+                            for c, f in getattr(self, "slowdown", {}).items()))
+
+    @property
+    def lut(self) -> PlacementLUT:
+        key = self._slowdown_key()
+        if key not in self._lut_cache:
+            self._lut_cache[key] = build_lut(
+                self.arch, self.model, t_slice_ns=self.t_slice_ns,
+                rho=self.rho, n_points=self.lut_points, em=self.em)
+        return self._lut_cache[key]
+
+    # -- one slice ----------------------------------------------------------
+    def step(self, n_tasks: int) -> SliceReport:
+        T = self.t_slice_ns
+        n_eff = max(n_tasks, 1)
+        lut = self.lut
+
+        # pass 1: ignore movement; pass 2: subtract its overhead (paper:
+        # "the calculation of t_constraint at runtime incorporates the data
+        # movement overhead").
+        entry = lut.lookup(T / n_eff)
+        t_move_c, e_move = self.em.movement_cost(self.placement,
+                                                 entry.placement)
+        t_move = max(t_move_c.values(), default=0.0)
+        if t_move > 0:
+            entry2 = lut.lookup(max(T - t_move, 0.0) / n_eff)
+            t_move_c2, e_move2 = self.em.movement_cost(self.placement,
+                                                       entry2.placement)
+            t_move2 = max(t_move_c2.values(), default=0.0)
+            if n_tasks * entry2.t_task_ns + t_move2 <= T + 1e-9:
+                entry, t_move, e_move = entry2, t_move2, e_move2
+            # if even the refined choice cannot absorb the migration this
+            # slice, keep the current placement when it meets the deadline
+            # on its own ("no inference delay due to data movement").
+            elif (n_tasks * self.em.task_cost(self.placement).t_task_ns
+                  <= T + 1e-9):
+                entry = None
+
+        if entry is None:
+            new_placement = dict(self.placement)
+            t_move, e_move = 0.0, 0.0
+        else:
+            new_placement = dict(entry.placement)
+        moved = sum(max(0, new_placement.get(k, 0) - self.placement.get(k, 0))
+                    for k in {*new_placement, *self.placement})
+
+        cost = self.em.task_cost(new_placement)
+        t_exec = n_tasks * cost.t_task_ns
+        busy = {c: t * n_tasks for c, t in cost.t_cluster_ns.items()}
+        e_dyn = n_tasks * cost.e_dyn_task_pj
+        e_static = self.em.static_energy_pj(new_placement, T, busy)
+        deadline_met = (t_exec + t_move) <= T + 1e-6
+
+        rep = SliceReport(self._idx, n_tasks, T / n_eff, new_placement,
+                          moved, t_move, e_move, t_exec, e_dyn, e_static,
+                          deadline_met)
+        self.placement = new_placement
+        self._idx += 1
+        return rep
+
+    def run(self, tasks_per_slice: List[int]) -> List[SliceReport]:
+        return [self.step(n) for n in tasks_per_slice]
+
+
+class FixedPlacementScheduler:
+    """Comparison-group runtime: placement never changes (Baseline-,
+    Heterogeneous- and Hybrid-PIM in Table I)."""
+
+    def __init__(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
+                 t_slice_ns: float, placement: Placement, rho: float = 1.0):
+        self.arch = arch
+        self.model = model
+        self.t_slice_ns = float(t_slice_ns)
+        self.em = EnergyModel(arch, model, rho=rho)
+        self.placement = dict(placement)
+        self._idx = 0
+
+    def step(self, n_tasks: int) -> SliceReport:
+        T = self.t_slice_ns
+        cost = self.em.task_cost(self.placement)
+        busy = {c: t * n_tasks for c, t in cost.t_cluster_ns.items()}
+        e_dyn = n_tasks * cost.e_dyn_task_pj
+        e_static = self.em.static_energy_pj(self.placement, T, busy)
+        rep = SliceReport(self._idx, n_tasks, T / max(n_tasks, 1),
+                          dict(self.placement), 0, 0.0, 0.0,
+                          n_tasks * cost.t_task_ns, e_dyn, e_static,
+                          n_tasks * cost.t_task_ns <= T + 1e-6)
+        self._idx += 1
+        return rep
+
+    def run(self, tasks_per_slice: List[int]) -> List[SliceReport]:
+        return [self.step(n) for n in tasks_per_slice]

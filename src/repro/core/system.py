@@ -1,0 +1,75 @@
+"""End-to-end HH-PIM system simulation: scenarios -> energy/latency traces."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.baselines import make_baseline_scheduler
+from repro.core.energy import EnergyModel
+from repro.core.scheduler import SliceReport, TimeSliceScheduler
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    arch: str
+    model: str
+    scenario: str
+    energy_uj: float
+    deadline_miss: int
+    reports: List[SliceReport]
+
+
+def default_t_slice_ns(model: sp.ModelSpec, rho: float = 1.0,
+                       headroom: float = 1.01) -> float:
+    """Time slice sized to fit PEAK_TASKS inferences at HH-PIM peak perf
+    (paper: 'up to 10 inferences per time slice'), plus 1% headroom so a
+    placement migration can be absorbed in a full-load slice."""
+    em = EnergyModel(sp.hh_pim(), model, rho=rho)
+    t_peak = em.task_cost(em.peak_placement(sram_only=True)).t_task_ns
+    return t_peak * workloads.PEAK_TASKS * headroom
+
+
+def run_hh_pim(model: sp.ModelSpec, scenario: str, *, rho: float = 1.0,
+               t_slice_ns: Optional[float] = None,
+               lut_points: int = 64) -> ScenarioResult:
+    t_slice = t_slice_ns or default_t_slice_ns(model, rho)
+    sched = TimeSliceScheduler(sp.hh_pim(), model, t_slice_ns=t_slice,
+                               rho=rho, lut_points=lut_points)
+    reports = sched.run(workloads.SCENARIOS[scenario])
+    return ScenarioResult(
+        "hh_pim", model.name, scenario,
+        sum(r.energy_pj for r in reports) * 1e-6,
+        sum(not r.deadline_met for r in reports), reports)
+
+
+def run_baseline(kind: str, model: sp.ModelSpec, scenario: str, *,
+                 rho: float = 1.0, t_slice_ns: Optional[float] = None
+                 ) -> ScenarioResult:
+    t_slice = t_slice_ns or default_t_slice_ns(model, rho)
+    sched = make_baseline_scheduler(kind, model, t_slice_ns=t_slice, rho=rho)
+    reports = sched.run(workloads.SCENARIOS[scenario])
+    return ScenarioResult(
+        f"{kind}_pim", model.name, scenario,
+        sum(r.energy_pj for r in reports) * 1e-6,
+        sum(not r.deadline_met for r in reports), reports)
+
+
+def energy_savings_table(model: sp.ModelSpec, *, rho: float = 1.0,
+                         lut_points: int = 64
+                         ) -> Dict[str, Dict[str, float]]:
+    """Savings of HH-PIM vs each comparison arch per scenario (Fig. 5)."""
+    t_slice = default_t_slice_ns(model, rho)
+    out: Dict[str, Dict[str, float]] = {}
+    for scen in workloads.SCENARIOS:
+        hh = run_hh_pim(model, scen, rho=rho, t_slice_ns=t_slice,
+                        lut_points=lut_points)
+        row = {}
+        for kind in ("baseline", "hetero", "hybrid"):
+            base = run_baseline(kind, model, scen, rho=rho,
+                                t_slice_ns=t_slice)
+            row[kind] = 100.0 * (1.0 - hh.energy_uj / base.energy_uj)
+        row["hh_energy_uj"] = hh.energy_uj
+        out[scen] = row
+    return out

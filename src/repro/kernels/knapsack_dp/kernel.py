@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the knapsack DP inner loop (Algorithm 1).
+
+The LUT build is on the serving runtime's critical path at every mesh
+reconfiguration (and the paper bounds it to <=1 % of a time slice), so the
+O(T*K) table build is worth a kernel. The t-loop is inherently sequential;
+the K axis vectorizes on the VPU (8x128 lanes).
+
+Tiling: the table is tiled over K into (T+1, bk) column panels that live in
+VMEM; the in-kernel shift across the k-1 boundary needs the last column of
+the previous panel, which is passed via a (T+1, 1) carry column. Grid is
+(K/bk,) - panels are independent given the carry, and the t-recurrence runs
+inside as a fori_loop over rows.
+
+VMEM: (T+1)*(bk+2)*4 B; defaults (T=2048, bk=512) use ~4.2 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INF = jnp.float32(jnp.inf)
+
+
+def _dp_kernel(dp_ref, carry_ref, o_ref, *, t_i: int, e_i: float, T1: int):
+    """One K-panel: run the t-recurrence, consuming the k=-1 carry column."""
+    def body(t, _):
+        row = dp_ref[t, :]
+        prev_t = jnp.maximum(t - t_i, 0)
+        # dp_new[t, k] uses dp_new[t - t_i, k - 1]: read the already-updated
+        # rows of the output panel, shifted by one k (carry provides k=-1;
+        # carry holds the *updated* last column of the previous panel).
+        shifted = jnp.concatenate([carry_ref[prev_t, :], o_ref[prev_t, :-1]])
+        take = jnp.where(t >= t_i, shifted + jnp.float32(e_i), float("inf"))
+        o_ref[t, :] = jnp.minimum(row, take)
+        return 0
+
+    jax.lax.fori_loop(0, T1, body, 0, unroll=False)
+
+
+@functools.partial(jax.jit, static_argnames=("t_i", "e_i", "bk", "interpret"))
+def dp_space_update_pallas(dp_prev: jnp.ndarray, *, t_i: int, e_i: float,
+                           bk: int = 512, interpret: bool = False
+                           ) -> jnp.ndarray:
+    """Fold one storage space into the (T+1, K+1) DP table.
+
+    K-panels have a sequential dependency through the carry column, so the
+    wrapper loops panels in python (K/bk steps, each a pallas_call); within
+    a panel the VPU processes bk lanes per row step.
+    """
+    T1, K1 = dp_prev.shape
+    pad_k = (-K1) % bk
+    dp = jnp.pad(dp_prev, ((0, 0), (0, pad_k)), constant_values=jnp.inf)
+    Kp = dp.shape[1]
+
+    kernel = functools.partial(_dp_kernel, t_i=int(t_i), e_i=float(e_i),
+                               T1=T1)
+    carry = jnp.full((T1, 1), INF, dtype=dp.dtype)   # k=-1 column
+    panels = []
+    for p in range(Kp // bk):
+        panel = jax.lax.slice_in_dim(dp, p * bk, (p + 1) * bk, axis=1)
+        panel_out = pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((T1, bk), lambda i: (0, 0)),
+                pl.BlockSpec((T1, 1), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((T1, bk), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((T1, bk), dp.dtype),
+            interpret=interpret,
+        )(panel, carry)
+        carry = panel_out[:, -1:]
+        panels.append(panel_out)
+    result = jnp.concatenate(panels, axis=1)[:, :K1]
+    return result

@@ -1,0 +1,38 @@
+"""Public op: per-cluster Algorithm-1 DP table, kernel- or ref-backed."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.knapsack_dp.kernel import dp_space_update_pallas
+from repro.kernels.knapsack_dp.ref import dp_space_update_ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+def knapsack_dp(t_items: Sequence[int], e_items: Sequence[float],
+                T: int, K: int, *, backend: str = "auto",
+                bk: int = 512) -> jnp.ndarray:
+    """Build the (T+1, K+1) min-energy table for one cluster's spaces.
+
+    backend: "auto" | "pallas" | "pallas_interpret" | "ref".
+    """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    dp = jnp.full((T + 1, K + 1), jnp.inf, dtype=jnp.float32)
+    dp = dp.at[:, 0].set(0.0)
+    for t_i, e_i in zip(t_items, e_items):
+        if backend == "ref":
+            dp = dp_space_update_ref(dp, int(t_i), float(e_i))
+        else:
+            dp = dp_space_update_pallas(
+                dp, t_i=int(t_i), e_i=float(e_i), bk=bk,
+                interpret=(backend == "pallas_interpret"))
+    return dp

@@ -1,0 +1,53 @@
+"""Pure-jnp oracle for the per-cluster knapsack DP table (Algorithm 1).
+
+dp[t, k] = min energy placing exactly k weight-groups in the spaces seen so
+far within time t (integer ticks). The recurrence over one space i is
+
+    dp_i[t, k] = min(dp_{i-1}[t, k], dp_i[t - t_i, k - 1] + e_i)
+
+which is sequential in t and vectorized over k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def dp_space_update_ref(dp_prev: jnp.ndarray, t_i: int, e_i: float
+                        ) -> jnp.ndarray:
+    """Fold one storage space into the DP table.
+
+    Args:
+      dp_prev: (T+1, K+1) float32 table of the previous space.
+      t_i:     integer tick cost per item in this space (static).
+      e_i:     energy per item in this space.
+
+    Returns:
+      (T+1, K+1) updated table.
+    """
+    T1, K1 = dp_prev.shape
+
+    def body(t, dp):
+        take = jnp.where(
+            t >= t_i,
+            jnp.concatenate([jnp.full((1,), INF),
+                             jax.lax.dynamic_slice_in_dim(
+                                 dp, jnp.maximum(t - t_i, 0), 1, axis=0
+                             )[0, :-1] + jnp.float32(e_i)]),
+            jnp.full((K1,), INF))
+        row = jnp.minimum(dp[t], take)
+        return dp.at[t].set(row)
+
+    return jax.lax.fori_loop(0, T1, body, dp_prev)
+
+
+def knapsack_dp_ref(t_items, e_items, T: int, K: int) -> jnp.ndarray:
+    """Full Algorithm-1 table for one cluster: returns dp[n] of shape
+    (T+1, K+1)."""
+    dp = jnp.full((T + 1, K + 1), INF, dtype=jnp.float32)
+    dp = dp.at[:, 0].set(0.0)
+    for t_i, e_i in zip(t_items, e_items):
+        dp = dp_space_update_ref(dp, int(t_i), float(e_i))
+    return dp

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: blocked W8A8 matmul with fused dequantization.
+
+TPU-native adaptation of the paper's PIM MAC datapath (DESIGN.md SS.3):
+INT8 weight residency is the "MRAM tier" - half the HBM traffic of bf16 -
+and the MAC accumulates in int32 like the PIM PE, dequantizing once per
+output tile in the epilogue.
+
+Tiling: grid = (M/bm, N/bn, K/bk) with K innermost (sequential reduction).
+Per grid step the kernel holds an (bm, bk) x-tile, a (bk, bn) w-tile and an
+(bm, bn) int32 accumulator in VMEM. Block sizes default to MXU-aligned
+(128x128x128); VMEM footprint = bm*bk + bk*bn (int8) + bm*bn*4 (acc)
+= 16 kB + 16 kB + 64 kB at defaults - far under the ~16 MB/core budget, so
+larger bn/bk can be chosen by the autotune sweep in benchmarks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pim_mac_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
+                    k_steps: int, out_dtype):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile; epilogue on last k."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # int8 x int8 -> int32 runs on the MXU with int8 inputs on TPU.
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        sx = sx_ref[...].astype(jnp.float32)      # (bm, 1)
+        sw = sw_ref[...].astype(jnp.float32)      # (1, bn)
+        o_ref[...] = (acc_ref[...].astype(jnp.float32) * sx * sw
+                      ).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "interpret"))
+def pim_matmul_pallas(x_i8: jnp.ndarray, w_i8: jnp.ndarray,
+                      scale_x: jnp.ndarray, scale_w: jnp.ndarray, *,
+                      bm: int = 128, bn: int = 128, bk: int = 128,
+                      out_dtype=jnp.float32,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Blocked W8A8 matmul. Shapes must be multiples of the block sizes
+    (the ops.py wrapper pads); ``scale_x``: (M,), ``scale_w``: (N,)."""
+    M, K = x_i8.shape
+    K2, N = w_i8.shape
+    assert K == K2, (x_i8.shape, w_i8.shape)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    k_steps = K // bk
+    sx = scale_x.reshape(M, 1).astype(jnp.float32)
+    sw = scale_w.reshape(1, N).astype(jnp.float32)
+
+    return pl.pallas_call(
+        functools.partial(_pim_mac_kernel, k_steps=k_steps,
+                          out_dtype=out_dtype),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x tile
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w tile
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # row scales
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # col scales
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],     # VMEM acc
+        interpret=interpret,
+    )(x_i8, w_i8, sx, sw)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the PIM-MAC kernel (W8A8 -> int32 -> scaled float).
+
+This is the TPU analogue of the paper's PIM MAC path: INT8 weights are the
+"MRAM tier" residency format (half the HBM bytes of bf16), and the MAC
+accumulates in int32 exactly as the PIM PE does.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pim_matmul_ref(x_i8: jnp.ndarray, w_i8: jnp.ndarray,
+                   scale_x: jnp.ndarray, scale_w: jnp.ndarray,
+                   out_dtype=jnp.float32) -> jnp.ndarray:
+    """``(M,K)i8 @ (K,N)i8 -> (M,N)`` with per-row/per-col dequant scales.
+
+    Args:
+      x_i8:     (M, K) int8 activations.
+      w_i8:     (K, N) int8 weights.
+      scale_x:  scalar or (M,) per-row activation scale.
+      scale_w:  scalar or (N,) per-column weight scale.
+    """
+    acc = jnp.dot(x_i8.astype(jnp.int32), w_i8.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    sx = jnp.asarray(scale_x, jnp.float32)
+    sw = jnp.asarray(scale_w, jnp.float32)
+    if sx.ndim == 1:
+        sx = sx[:, None]
+    if sw.ndim == 1:
+        sw = sw[None, :]
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)

@@ -1,0 +1,228 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+we build the production mesh (16x16 single pod / 2x16x16 multi-pod), attach
+NamedShardings to abstract params/optimizer/batch pytrees, and require
+``jax.jit(step).lower(...).compile()`` to succeed. ``memory_analysis()``
+(fits per chip?) and ``cost_analysis()`` (FLOPs/bytes) plus the collective
+bytes parsed from the compiled HLO are dumped as JSON for
+EXPERIMENTS.md SS.Dry-run / SS.Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh single,multi --out experiments/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.optim.adamw import OptimizerConfig, make_optimizer
+from repro.parallel import sharding as sh
+from repro.train.step import (default_optimizer_kind,
+                              default_train_memory_plan, make_train_step)
+
+from repro.launch.hloparse import collective_bytes, while_summary
+
+
+def _flops_bytes(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", -1.0)),
+                "bytes_accessed": float(ca.get("bytes accessed", -1.0)),
+                "raw_keys": sorted(k for k in ca if "bytes accessed" in k
+                                   or k == "flops")[:8]}
+    except Exception as e:          # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _memory(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "alias_size_in_bytes")
+        return {k: int(getattr(ma, k)) for k in keys if hasattr(ma, k)}
+    except Exception as e:          # pragma: no cover
+        return {"error": repr(e)}
+
+
+def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 8):
+    """Build and lower one cell; returns (lowered, meta)."""
+    cfg = sp.dryrun_config(get_config(arch), mesh)
+    seq, batch, kind = sp.SHAPES[shape]
+    ok, why = sp.cell_is_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": why}
+
+    params_abs = sp.abstract_params(
+        cfg, serve_dtype=None if kind == "train" else jnp.bfloat16)
+    inference = (kind != "train"
+                 and sh.inference_fits_tp_only(params_abs, mesh))
+    pshard = sh.params_shardings(params_abs, mesh, inference=inference)
+    meta = {"arch": arch, "shape": shape, "kind": kind,
+            "seq": seq, "batch": batch,
+            "mesh": dict(mesh.shape), "tp_only_params": inference,
+            "n_params": int(sum(x.size for x in jax.tree.leaves(params_abs)))}
+
+    if kind == "train":
+        # ZeRO-1 mixed precision when the bf16 compute params are cheap to
+        # replicate across data ranks (<= 2 GiB/dev): kills per-microbatch
+        # FSDP weight gathers (SS.Perf iter 3). Bigger models stay FSDP -
+        # they are memory-bound and their collectives are activation ARs.
+        zero1 = sh.inference_fits_tp_only(
+            sp.abstract_params(cfg, serve_dtype=jnp.bfloat16), mesh,
+            budget_bytes=2 * 2 ** 30)
+        if zero1:
+            params_abs = sp.abstract_params(cfg, serve_dtype=jnp.bfloat16)
+            pshard = sh.params_shardings(params_abs, mesh, inference=True)
+            opt_cfg = OptimizerConfig(kind="adamw_mp")
+        else:
+            opt_cfg = OptimizerConfig(kind=default_optimizer_kind(cfg))
+        opt = make_optimizer(opt_cfg)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        oshard = sh.params_shardings_like(opt_abs, params_abs, pshard, mesh)
+        batch_abs = sp.train_batch_specs(cfg, seq, batch)
+        bshard = sh.batch_shardings(batch_abs, mesh)
+        plan = default_train_memory_plan(cfg, batch)
+        step = make_train_step(cfg, opt, **plan)
+        meta["microbatches"] = plan["num_microbatches"]
+        meta["accum_dtype"] = str(plan["accum_dtype"].__name__)
+        meta["optimizer"] = opt_cfg.kind
+        meta["zero1"] = zero1
+        with mesh:
+            jitted = jax.jit(step,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        return lowered, meta
+
+    if kind == "prefill":
+        batch_abs = sp.train_batch_specs(cfg, seq, batch)
+        bshard = sh.batch_shardings(batch_abs, mesh)
+
+        def prefill_step(params, b):
+            # serving prefill: process the prompt, sample from the LAST
+            # position only (materializing (B, S, vocab) logits at 32k x
+            # 256k vocab would be a 500 GiB tensor no server ever builds)
+            h, _ = lm.forward_hidden(params, cfg, b["tokens"],
+                                     prefix_embeds=b.get("prefix_embeds"),
+                                     enc_frames=b.get("enc_frames"))
+            head = (params["embed"].T if cfg.tie_embeddings
+                    else params["lm_head"]).astype(cfg.dtype)
+            return h[:, -1, :] @ head
+
+        with mesh:
+            jitted = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                             out_shardings=None)
+            lowered = jitted.lower(params_abs, batch_abs)
+        return lowered, meta
+
+    # decode
+    state_abs = sp.abstract_decode_state(cfg, batch, seq)
+    sshard = sh.decode_state_shardings(state_abs, mesh)
+    tok_abs, pos_abs = sp.decode_token_specs(batch)
+
+    def serve_step(params, state, toks, pos):
+        return lm.decode_step(params, cfg, state, toks, pos)
+
+    with mesh:
+        jitted = jax.jit(serve_step,
+                         in_shardings=(pshard, sshard, None, None),
+                         out_shardings=(None, sshard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params_abs, state_abs, tok_abs, pos_abs)
+    return lowered, meta
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             force: bool = False) -> dict:
+    tag = f"{arch}__{shape}__{mesh_kind}"
+    out_file = out_dir / f"{tag}.json"
+    if out_file.exists() and not force:
+        return json.loads(out_file.read_text())
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    rec = {"cell": tag}
+    try:
+        lowered, meta = lower_cell(arch, shape, mesh)
+        rec.update(meta)
+        if lowered is None:
+            rec["status"] = "skipped"
+        else:
+            compiled = lowered.compile()
+            rec["status"] = "ok"
+            rec["compile_s"] = round(time.time() - t0, 1)
+            rec["memory"] = _memory(compiled)
+            rec["cost"] = _flops_bytes(compiled)
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["while_trips"] = while_summary(hlo)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_file.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(sp.SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = args.mesh.split(",")
+    out_dir = Path(args.out)
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, out_dir,
+                               force=args.force)
+                status = rec.get("status")
+                n_ok += status == "ok"
+                n_skip += status == "skipped"
+                n_err += status == "error"
+                line = f"{rec['cell']:55s} {status}"
+                if status == "ok":
+                    mem = rec.get("memory", {})
+                    per_dev = (mem.get("argument_size_in_bytes", 0)
+                               + mem.get("temp_size_in_bytes", 0))
+                    line += (f" compile={rec.get('compile_s')}s"
+                             f" mem/dev={per_dev/2**30:.2f}GiB"
+                             f" flops={rec.get('cost', {}).get('flops')}")
+                elif status == "error":
+                    line += f"  {rec.get('error', '')[:120]}"
+                print(line, flush=True)
+    print(f"\nok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

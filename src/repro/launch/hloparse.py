@@ -1,0 +1,148 @@
+"""Post-optimization HLO parsing: collective bytes with while-loop trip
+accounting.
+
+XLA's ``cost_analysis`` counts a while body ONCE regardless of trip count
+(verified experimentally - see EXPERIMENTS.md SS.Roofline/Method), and the
+same holds for naive text scans. Here we parse the compiled module into
+computations, find ``while`` ops, extract their trip counts from the loop
+condition's comparison constant, and propagate multipliers through the call
+graph, so a collective inside the layer scan counts n_layers times.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Iterable, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{")
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COLLECTIVE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[\w\[\]{},]+?))\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_WHILE = re.compile(
+    r"while\(.*?\)\s*,\s*condition=%?([\w.\-]+)\s*,\s*body=%?([\w.\-]+)"
+    r"(?:.*?known_trip_count.{0,8}?n.{0,4}?(\d+))?")
+_CONST = re.compile(r"constant\((\d+)\)")
+_CALLEE = re.compile(
+    r"(?:to_apply|body|condition|branch_computations=\{[^}]*|calls)"
+    r"=\{?%?([\w.\-]+(?:\s*,\s*%?[\w.\-]+)*)\}?")
+
+
+def split_computations(hlo: str) -> Dict[str, str]:
+    comps: Dict[str, list] = {}
+    name = None
+    for line in hlo.splitlines():
+        m = _COMP_HDR.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            name = m.group(1)
+            comps[name] = []
+        elif name is not None:
+            if line.strip() == "}":
+                name = None
+            else:
+                comps[name].append(line)
+    return {k: "\n".join(v) for k, v in comps.items()}
+
+
+def shape_bytes(sig: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE.findall(sig):
+        base = _DTYPE_BYTES.get(dt)
+        if base is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * base
+    return total
+
+
+def collective_bytes_in(body: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for sig, kind in _COLLECTIVE.findall(body):
+        out[kind] = out.get(kind, 0) + shape_bytes(sig)
+    return out
+
+
+def while_trip_count(cond_body: str) -> int:
+    consts = [int(c) for c in _CONST.findall(cond_body)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(comps: Dict[str, str], entry: str
+                            ) -> Dict[str, float]:
+    """Walk the call graph from entry; while bodies multiply by trip count,
+    everything else (calls, fusions, conditional branches) by 1."""
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float) -> None:
+        mult[name] = mult.get(name, 0.0) + m
+        body = comps.get(name, "")
+        for wm in _WHILE.finditer(body):
+            cond, wbody, n = wm.group(1), wm.group(2), wm.group(3)
+            trips = int(n) if n else while_trip_count(comps.get(cond, ""))
+            visit(cond, m * trips)
+            visit(wbody, m * trips)
+        seen_here = set()
+        for cm in re.finditer(
+                r"(?:to_apply=|calls=)%?([\w.\-]+)", body):
+            callee = cm.group(1)
+            if callee in comps and callee not in seen_here:
+                seen_here.add(callee)
+                # count each to_apply target once per textual occurrence
+                visit(callee, m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def collective_bytes(hlo: str) -> Dict[str, float]:
+    """Loop-corrected collective bytes per device, by op kind."""
+    comps = split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line.strip())
+            if m:
+                entry = m.group(1)
+                break
+    if entry is None:
+        entry = next(iter(comps), None)
+    if entry is None:
+        return {"total": 0.0}
+    mult = computation_multipliers(comps, entry)
+    out: Dict[str, float] = {}
+    uncounted = 0
+    for name, body in comps.items():
+        m = mult.get(name)
+        if m is None:
+            # computation not reached through the walked edges (e.g. fusion
+            # internals) - count once
+            m = 1.0
+            if _COLLECTIVE.search(body):
+                uncounted += 1
+        for kind, b in collective_bytes_in(body).items():
+            out[kind] = out.get(kind, 0.0) + b * m
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    if uncounted:
+        out["computations_counted_once"] = uncounted
+    return out
+
+
+def while_summary(hlo: str) -> Dict[str, int]:
+    comps = split_computations(hlo)
+    out = {}
+    for name, body in comps.items():
+        for wm in _WHILE.finditer(body):
+            cond, wbody, n = wm.group(1), wm.group(2), wm.group(3)
+            out[wbody] = (int(n) if n
+                          else while_trip_count(comps.get(cond, "")))
+    return out

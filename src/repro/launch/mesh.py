@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (assignment requirement).
+
+Single pod : (data=16, model=16)            - 256 chips (TPU v5e pod).
+Multi-pod  : (pod=2, data=16, model=16)     - 512 chips across 2 pods; the
+"pod" axis carries pure data parallelism (params replicated per pod, grads
+all-reduced across the DCI), matching how real multi-pod training slices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small host-device mesh for CPU integration tests (requires
+    XLA_FLAGS=--xla_force_host_platform_device_count set by the caller's
+    process, NOT globally)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct input specs for every (architecture x shape) cell.
+
+``input_specs()`` returns weak-type-correct, shardable stand-ins - no device
+allocation ever happens in the dry-run path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+PyTree = Any
+
+# shape id -> (seq_len, global_batch, step kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4_096, 256, "train"),
+    "prefill_32k": (32_768, 32, "prefill"),
+    "decode_32k": (32_768, 128, "decode"),
+    "long_500k": (524_288, 1, "decode"),
+}
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (assignment rule)."""
+    if shape == "long_500k" and not cfg.is_subquadratic:
+        return False, ("skipped: pure full-attention arch at 512k context "
+                       "(assignment rule; noted in DESIGN.md)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, seq: int, batch: int) -> PyTree:
+    """Batch pytree spec for one train/prefill step."""
+    s_text = seq - (cfg.n_prefix_embeds or 0)
+    out = {
+        "tokens": _sds((batch, s_text), jnp.int32),
+        "labels": _sds((batch, s_text), jnp.int32),
+    }
+    if cfg.n_prefix_embeds:
+        out["prefix_embeds"] = _sds((batch, cfg.n_prefix_embeds,
+                                     cfg.d_model), cfg.dtype)
+    if cfg.is_encdec:
+        out["enc_frames"] = _sds(
+            (batch, max(seq // cfg.enc_len_divisor, 1), cfg.d_model),
+            cfg.dtype)
+    return out
+
+
+def abstract_params(cfg: ModelConfig, serve_dtype=None) -> PyTree:
+    """Abstract param tree; ``serve_dtype`` casts float leaves (inference
+    residency format - bf16 serving halves HBM bytes vs f32 master)."""
+    tree = jax.eval_shape(lambda k: lm.init_lm(k, cfg),
+                          jax.random.PRNGKey(0))
+    if serve_dtype is None:
+        return tree
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, serve_dtype if jnp.issubdtype(x.dtype, jnp.floating)
+            else x.dtype), tree)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_len: int
+                          ) -> PyTree:
+    if cfg.is_encdec:
+        enc_len = max(max_len // cfg.enc_len_divisor, 1)
+        enc = _sds((batch, enc_len, cfg.d_model), cfg.dtype)
+        return jax.eval_shape(
+            lambda e: lm.init_decode_state(cfg, batch, max_len, enc_out=e),
+            enc)
+    return jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, batch, max_len))
+
+
+def decode_token_specs(batch: int) -> Tuple[PyTree, PyTree]:
+    return _sds((batch,), jnp.int32), _sds((), jnp.int32)
+
+
+def dryrun_config(cfg: ModelConfig, mesh=None) -> ModelConfig:
+    """Full config tuned for lowering: bf16, scanned stacks, remat on;
+    MoE dispatch blocked by the mesh's data-parallel extent and activation
+    batch dims pinned to the DP axes."""
+    nb = 1
+    dp_axes = []
+    if mesh is not None:
+        for ax in ("pod", "data"):
+            if ax in mesh.shape:
+                nb *= mesh.shape[ax]
+                dp_axes.append(ax)
+    return dataclasses.replace(cfg, dtype=jnp.bfloat16, scan_layers=True,
+                               remat=True, moe_dispatch_blocks=nb,
+                               act_dp_axes=tuple(dp_axes) or None)

@@ -1,0 +1,5 @@
+"""Model zoo: configs + pure-function LMs for all assigned architectures."""
+from repro.models.common import ModelConfig, reduced
+from repro.models import lm
+
+__all__ = ["ModelConfig", "reduced", "lm"]

@@ -1,0 +1,302 @@
+"""Grouped-query attention with RoPE variants, local windows, KV caches and
+encoder-decoder cross attention. Pure functions over explicit param dicts."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, dense_init, split_keys
+
+KVCache = Dict[str, jnp.ndarray]   # {"k": (B,S,KV,hd), "v": ..., "pos": ()}
+
+
+def init_attention(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    hd, d = cfg.hd, cfg.d_model
+    ks = split_keys(key, ["q", "k", "v", "o"])
+    p = {
+        "wq": dense_init(ks["q"], (d, cfg.n_heads * hd)),
+        "wk": dense_init(ks["k"], (d, cfg.n_kv_heads * hd)),
+        "wv": dense_init(ks["v"], (d, cfg.n_kv_heads * hd)),
+        "wo": dense_init(ks["o"], (cfg.n_heads * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.n_heads, hd)
+    k = k.reshape(B, S, cfg.n_kv_heads, hd)
+    v = v.reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg.rope_kind)
+    k = apply_rope(k, positions, cfg.rope_kind)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd); GQA via head grouping."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    q = q.reshape(B, Sq, KV, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(jnp.float32(hd))
+    if mask is not None:
+        logits = jnp.where(mask, logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(B, Sq, H * hd)
+
+
+def _causal_mask(Sq: int, Sk: int, window: Optional[int] = None):
+    """(1,1,1,Sq,Sk) boolean mask; window => local (sliding) attention."""
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None, None]
+
+
+# sequences at or above this length take the O(S)-memory chunked path
+CHUNKED_ATTN_THRESHOLD = 1024
+Q_CHUNK = 512
+K_CHUNK = 512   # == Q_CHUNK so the causal diagonal is a single chunk pair
+
+
+def _chunked_causal_sdpa(q, k, v, cfg: ModelConfig, q_chunk: int,
+                         k_chunk: int, causal: bool = True):
+    """Flash-style online-softmax attention, O(S) memory, pure jnp.
+
+    Outer scan over query chunks, inner scan over key chunks with running
+    (max, denom, acc) carries in fp32. Handles causal + GQA.
+
+    Masking is chunk-relative: chunk pairs are fully-visible (j < i),
+    diagonal (one shared (c, c) triangular additive mask) or fully masked
+    (scalar select) - per-pair boolean tensors would be hoisted out of the
+    scan by XLA into O(B * S * c) pred temps (observed 0.5 GiB/device on
+    the 4k cells before this formulation).
+    """
+    assert q_chunk == k_chunk
+    c = q_chunk
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    assert causal is False or Sq == Sk
+    KV = k.shape[2]
+    g = H // KV
+    nq, n = Sq // c, Sk // c
+    qc = q.reshape(B, nq, c, KV, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(B, n, c, KV, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, c, KV, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    # single chunk-invariant additive mask for the diagonal pair
+    tri = jnp.where(jnp.arange(c)[None, :] <= jnp.arange(c)[:, None],
+                    0.0, -1e30).astype(jnp.float32)
+
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx                       # (B,KV,g,c,hd), ()
+
+        # checkpointed: the scan's backward otherwise saves the (c, c)
+        # probability block of EVERY k-step => O(S^2) residuals (observed
+        # ~45 GiB/device at 7k width). Recomputing scores per block is the
+        # classic flash-attention backward.
+        @jax.checkpoint
+        def k_step(carry, kj_idx):
+            m, l, acc = carry
+            kj, vj, jk = kj_idx
+            s = jnp.einsum("bkgqh,bksh->bkgqs", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32)) * scale
+            if causal:
+                # j < i: visible; j == i: triangular; j > i: masked
+                s = s + jnp.where(jk == iq, 1.0, 0.0) * tri
+                s = s + jnp.where(jk <= iq, 0.0, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p_ = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p_.sum(axis=-1)
+            acc_new = (acc * corr[..., None]
+                       + jnp.einsum("bkgqs,bksh->bkgqh", p_,
+                                    vj.astype(jnp.float32)))
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, g, c), -1e30, jnp.float32),
+                jnp.zeros((B, KV, g, c), jnp.float32),
+                jnp.zeros((B, KV, g, c, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, init, (kc, vc, jnp.arange(n)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    # (nq, B, KV, g, c, hd) -> (B, Sq, H*hd)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H * hd)
+    return out.astype(q.dtype)
+
+
+def _local_windowed_sdpa(q, k, v, cfg: ModelConfig, q_chunk: int):
+    """Sliding-window attention: per q-chunk, attend to the preceding
+    ``window`` keys only - O(S * window) compute, exact."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    W = cfg.local_window
+    nq = S // q_chunk
+    span = W + q_chunk
+    # left-pad keys so every chunk slices a static [span] window
+    kp = jnp.pad(k, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (W, 0), (0, 0), (0, 0)))
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qc = q.reshape(B, nq, q_chunk, KV, g, hd).transpose(1, 0, 3, 4, 2, 5)
+
+    # chunk-invariant window mask: relative offset k-q = (kk-W) - qq is the
+    # same for every chunk, so one (cq, span) additive mask suffices; only
+    # the left-boundary validity (k_pos >= 0) varies per chunk, and that is
+    # a cheap per-chunk (span,) vector.
+    qq = jnp.arange(q_chunk)[:, None]
+    kk = jnp.arange(span)[None, :]
+    rel = (kk - W) - qq
+    win_mask = jnp.where((rel <= 0) & (rel > -W), 0.0,
+                         -1e30).astype(jnp.float32)
+
+    @jax.checkpoint
+    def q_step(_, qi_idx):
+        qi, iq = qi_idx
+        start = iq * q_chunk
+        kj = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vj = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        kj = kj.transpose(0, 2, 1, 3)      # (B,KV,span,hd)
+        vj = vj.transpose(0, 2, 1, 3)
+        s = jnp.einsum("bkgqh,bksh->bkgqs", qi.astype(jnp.float32),
+                       kj.astype(jnp.float32)) * scale
+        valid = jnp.where(start - W + jnp.arange(span) >= 0, 0.0,
+                          -1e30).astype(jnp.float32)
+        s = s + win_mask + valid[None, :]
+        p_ = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bkgqs,bksh->bkgqh", p_, vj.astype(jnp.float32))
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, S, H * hd)
+    return out.astype(q.dtype)
+
+
+def attention(p, x, cfg: ModelConfig, positions, *,
+              layer_kind: str = "attn") -> jnp.ndarray:
+    """Full-sequence (training / prefill) self attention.
+
+    Long sequences use the O(S)-memory chunked path (flash-style online
+    softmax for causal-full, exact windowed slicing for local attention).
+    """
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    local = cfg.attn_kind == "local"
+    if S >= CHUNKED_ATTN_THRESHOLD and S % Q_CHUNK == 0:
+        if local and cfg.local_window < S and S % K_CHUNK == 0:
+            out = _local_windowed_sdpa(q, k, v, cfg, Q_CHUNK)
+        elif not local and S % K_CHUNK == 0:
+            out = _chunked_causal_sdpa(q, k, v, cfg, Q_CHUNK, K_CHUNK)
+        else:
+            mask = _causal_mask(S, S, cfg.local_window if local else None)
+            out = _sdpa(q, k, v, mask, cfg)
+    else:
+        mask = _causal_mask(S, S, cfg.local_window if local else None)
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def encoder_attention(p, x, cfg: ModelConfig, positions) -> jnp.ndarray:
+    """Bidirectional self-attention (encoder side)."""
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    S = x.shape[1]
+    if (S >= CHUNKED_ATTN_THRESHOLD and S % Q_CHUNK == 0
+            and S % K_CHUNK == 0):
+        out = _chunked_causal_sdpa(q, k, v, cfg, Q_CHUNK, K_CHUNK,
+                                   causal=False)
+    else:
+        out = _sdpa(q, k, v, None, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_cross_attention(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    return init_attention(key, cfg)
+
+
+def cross_attention(p, x, enc_out, cfg: ModelConfig) -> jnp.ndarray:
+    """Decoder cross attention over encoder outputs (no RoPE, no mask)."""
+    B, Sq, _ = x.shape
+    Sk = enc_out.shape[1]
+    hd = cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, Sq, cfg.n_heads, hd)
+    k = (enc_out @ p["wk"].astype(x.dtype)).reshape(B, Sk, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"].astype(x.dtype)).reshape(B, Sk, cfg.n_kv_heads, hd)
+    if (max(Sq, Sk) >= CHUNKED_ATTN_THRESHOLD and Sq % Q_CHUNK == 0
+            and Sk % K_CHUNK == 0):
+        out = _chunked_causal_sdpa(q, k, v, cfg, Q_CHUNK, K_CHUNK,
+                                   causal=False)
+    else:
+        out = _sdpa(q, k, v, None, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype) -> KVCache:
+    if cfg.attn_kind == "local":
+        max_len = min(max_len, cfg.local_window)
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,
+                     pos: jnp.ndarray) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x: (B,1,d); pos: () int32 absolute position.
+
+    Local attention uses a ring buffer of size ``local_window``; full
+    attention appends at ``pos``.
+    """
+    B = x.shape[0]
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    C = cache["k"].shape[1]
+    slot = (pos % C).astype(jnp.int32)
+    # masked-select write instead of dynamic-update-slice: a DUS with a
+    # dynamic index on the sequence-sharded cache dim makes SPMD all-gather
+    # the whole cache every layer (measured 3.1 GiB/step on qwen decode);
+    # the elementwise select partitions trivially (EXPERIMENTS.md SS.Perf).
+    sel = (jnp.arange(C, dtype=jnp.int32) == slot)[None, :, None, None]
+    new_k = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
+    new_v = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
+    # valid = entries written so far and (for local) within the window
+    idx = jnp.arange(C)
+    if cfg.attn_kind == "local":
+        valid = (idx <= slot) | (pos >= C)      # ring buffer full => all
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, None, None, :]
+    out = _sdpa(q, new_k, new_v, mask, cfg)
+    out = out @ p["wo"].astype(x.dtype)
+    return out, {"k": new_k, "v": new_v}
+
+
+def cross_attention_decode(p, x, enc_out, cfg: ModelConfig) -> jnp.ndarray:
+    return cross_attention(p, x, enc_out, cfg)

@@ -1,0 +1,187 @@
+"""Model configuration and shared building blocks for the architecture zoo."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config covers all ten assigned architectures (DESIGN.md SS.5)."""
+
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+
+    # attention
+    attn_kind: str = "full"      # full | local
+    local_window: int = 2048
+    rope_kind: str = "full"      # full | 2d | none
+    qkv_bias: bool = False
+    mlp_act: str = "swiglu"      # swiglu | geglu | gelu
+
+    # MoE
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    moe_dense_ff: int = 0        # arctic: dense residual MLP alongside MoE
+    moe_dispatch_blocks: int = 1  # launcher sets = data-parallel size
+
+    # hybrid / ssm block pattern, repeated through depth:
+    #   "attn" | "rglru" | "mlstm" | "slstm"
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # enc-dec
+    n_encoder_layers: int = 0    # >0 => encoder-decoder
+    enc_len_divisor: int = 1     # encoder frames = seq_len // divisor
+
+    # modality frontend stub: none | patch | frames
+    frontend: str = "none"
+    n_prefix_embeds: int = 0     # vlm: patch embeddings prepended
+
+    # numerics / compile hygiene
+    dtype: Any = jnp.bfloat16
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    scan_layers: bool = True
+    remat: bool = True
+    # activation batch-dim sharding hint (mesh axis names); set by the
+    # launcher. Without it SPMD flip-flops layouts between FSDP-sharded
+    # params and replicates multi-GiB FFN transients.
+    act_dp_axes: Optional[Tuple[str, ...]] = None
+
+    # serving: HH-PIM tier fractions (hp_bf16, hp_int8, lp_bf16, lp_int8)
+    tier_fractions: Optional[Tuple[float, float, float, float]] = None
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_encoder_layers > 0
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode state does not grow linearly with full context
+        (SSM / hybrid-with-local-attention)."""
+        return all(k in ("rglru", "mlstm", "slstm") or
+                   (k == "attn" and self.attn_kind == "local")
+                   for k in self.block_pattern)
+
+    def pattern_for_depth(self) -> Tuple[str, ...]:
+        p = []
+        while len(p) < self.n_layers:
+            p.extend(self.block_pattern)
+        return tuple(p[: self.n_layers])
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    kv = max(1, min(cfg.n_kv_heads, 2))
+    heads = max(kv, 4)
+    base = dict(
+        n_layers=min(cfg.n_layers, len(cfg.block_pattern) * 2),
+        d_model=64, n_heads=heads, n_kv_heads=kv, d_ff=128,
+        vocab_size=512, head_dim=16, local_window=16,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_dense_ff=64 if cfg.moe_dense_ff else 0,
+        n_encoder_layers=min(cfg.n_encoder_layers, 2),
+        n_prefix_embeds=4 if cfg.n_prefix_embeds else 0,
+        dtype=jnp.float32, scan_layers=False, remat=False,
+    )
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)
+
+
+# ---------------------------------------------------------------------------
+# numerics helpers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def _rope_freqs(hd: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               kind: str = "full") -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S).
+
+    kind="full": rotate all hd dims; kind="2d": ChatGLM-style - rotate only
+    the first half of head_dim (two-dimensional RoPE), pass the rest through.
+    """
+    if kind == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if kind == "full" else hd // 2
+    freqs = _rope_freqs(rot)                                # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr, xp], axis=-1).astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(fan_in)).astype(jnp.float32)
+
+
+def split_keys(key, names) -> Dict[str, jax.Array]:
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))
+
+
+def replicate_for_gather(table: jnp.ndarray, cfg: "ModelConfig"
+                         ) -> jnp.ndarray:
+    """Explicitly all-gather a (sharded) lookup table before a token gather.
+
+    Gathering from a d_model-sharded table and resharding the result trips
+    an XLA SPMD dynamic-slice verifier bug (observed on the 16x16 mesh);
+    resharding the parameter first is one clean all-gather instead."""
+    if cfg.act_dp_axes is None:
+        return table
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(table, P())
+    except (ValueError, TypeError):
+        return table
+
+
+def shard_activations(x: jnp.ndarray, cfg: "ModelConfig",
+                      *trailing) -> jnp.ndarray:
+    """Constrain an activation's batch dim to the DP axes (no-op outside a
+    mesh or when the launcher did not set ``act_dp_axes``)."""
+    if cfg.act_dp_axes is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = (cfg.act_dp_axes,) + tuple(trailing) + \
+        (None,) * (x.ndim - 1 - len(trailing))
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, TypeError):
+        return x

@@ -1,0 +1,77 @@
+"""Tiered linear layers: the HH-PIM storage spaces realized on TPU.
+
+A weight matrix is split column-wise into four segments
+(hp_bf16 | hp_int8 | lp_bf16 | lp_int8) per the placement LUT. bf16
+segments are the "SRAM" tier (full-bandwidth reads); int8 segments are the
+"MRAM" tier (half the HBM bytes, W8A8 through the pim_mac kernel). The
+hp/lp pools differ in chips+clock in the energy model; functionally the
+math is identical, so outputs are placement-invariant up to int8
+quantization error.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.pim_mac.ops import pim_matmul
+from repro.quant.int8 import quantize_activations, quantize_per_channel
+
+SPACES = ("hp_bf16", "hp_int8", "lp_bf16", "lp_int8")
+
+
+def split_weight(w: jnp.ndarray, counts: Dict[str, int]) -> Dict[str, dict]:
+    """Split (d_in, d_out) columns into tier segments per `counts`
+    (columns per space, summing to d_out). int8 tiers store (q, scale)."""
+    assert sum(counts.values()) == w.shape[1], (counts, w.shape)
+    segs: Dict[str, dict] = {}
+    off = 0
+    for name in SPACES:
+        n = counts.get(name, 0)
+        seg = w[:, off:off + n]
+        off += n
+        if n == 0:
+            segs[name] = {"empty": True}
+        elif name.endswith("int8"):
+            q, s = quantize_per_channel(seg, axis=0)
+            segs[name] = {"q": q, "scale": s}
+        else:
+            segs[name] = {"w": seg.astype(jnp.bfloat16)}
+    return segs
+
+
+def tiered_matmul(x: jnp.ndarray, segs: Dict[str, dict],
+                  backend: str = "ref") -> jnp.ndarray:
+    """x: (..., d_in) -> (..., d_out), concatenating tier outputs."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    outs = []
+    xq = sx = None
+    for name in SPACES:
+        seg = segs[name]
+        if seg.get("empty"):
+            continue
+        if name.endswith("int8"):
+            if xq is None:
+                xq, sx = quantize_activations(x2)
+            y = pim_matmul(xq, seg["q"], sx, seg["scale"],
+                           backend=backend, out_dtype=jnp.float32)
+        else:
+            y = (x2.astype(jnp.bfloat16) @ seg["w"]).astype(jnp.float32)
+        outs.append(y)
+    y = jnp.concatenate(outs, axis=-1)
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+def fractions_to_counts(d_out: int, placement: Dict[str, int],
+                        total: int) -> Dict[str, int]:
+    """Scale a global weight-count placement to one matrix's columns."""
+    counts = {}
+    acc = 0
+    for name in SPACES[:-1]:
+        c = int(round(d_out * placement.get(name, 0) / max(total, 1)))
+        c = min(c, d_out - acc)
+        counts[name] = c
+        acc += c
+    counts[SPACES[-1]] = d_out - acc
+    return counts

@@ -1,0 +1,43 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU MLPs."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str) -> Dict[str, jnp.ndarray]:
+    if act in ("swiglu", "geglu"):
+        ks = split_keys(key, ["gate", "up", "down"])
+        return {
+            "w_gate": dense_init(ks["gate"], (d_model, d_ff)),
+            "w_up": dense_init(ks["up"], (d_model, d_ff)),
+            "w_down": dense_init(ks["down"], (d_ff, d_model)),
+        }
+    ks = split_keys(key, ["up", "down"])
+    return {
+        "w_up": dense_init(ks["up"], (d_model, d_ff)),
+        "w_down": dense_init(ks["down"], (d_ff, d_model)),
+    }
+
+
+def mlp(p, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    dt = x.dtype
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return (g * u) @ p["w_down"].astype(dt)
+    u = jax.nn.gelu(x @ p["w_up"].astype(dt))
+    return u @ p["w_down"].astype(dt)
+
+
+def init_mlp_cfg(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    return init_mlp(key, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+
+
+def mlp_cfg(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    return mlp(p, x, cfg.mlp_act)

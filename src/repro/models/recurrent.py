@@ -1,0 +1,301 @@
+"""Recurrent sequence mixers: RG-LRU (Griffin/RecurrentGemma) and
+xLSTM's mLSTM / sLSTM cells.
+
+Training/prefill uses ``jax.lax.associative_scan`` where the recurrence is
+affine (RG-LRU) and ``jax.lax.scan`` otherwise; decode is a single state
+update - this is what makes ``long_500k`` O(1)-state for these archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, split_keys
+
+_SCAN_CHUNK = 128
+
+
+def chunked_scan(f, init, xs, chunk: int = _SCAN_CHUNK):
+    """Two-level scan with a checkpointed inner loop.
+
+    A flat ``lax.scan`` over S steps saves the carry at every step for the
+    backward pass - O(S x state) residuals, catastrophic for matrix-memory
+    cells (mLSTM state is (B,H,hd,hd)). Chunking saves carries only at the
+    S/chunk boundaries and recomputes inside a chunk (binomial
+    checkpointing, one extra forward).
+    """
+    T = jax.tree.leaves(xs)[0].shape[0]
+    if T % chunk or T <= chunk:
+        return jax.lax.scan(f, init, xs)
+    n = T // chunk
+    xs_c = jax.tree.map(
+        lambda x: x.reshape((n, chunk) + x.shape[1:]), xs)
+
+    @jax.checkpoint
+    def outer(carry, xc):
+        return jax.lax.scan(f, carry, xc)
+
+    carry, ys_c = jax.lax.scan(outer, init, xs_c)
+    ys = jax.tree.map(
+        lambda y: y.reshape((T,) + y.shape[2:]), ys_c)
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma recurrent block: conv1d + gated linear recurrence)
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4
+_C_GATE = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ks = split_keys(key, ["in_x", "in_g", "conv", "a", "x_gate", "out",
+                          "lam"])
+    return {
+        # block input projections (recurrent branch + gelu gate branch)
+        "w_in_x": dense_init(ks["in_x"], (d, d)),
+        "w_in_g": dense_init(ks["in_g"], (d, d)),
+        "conv_w": dense_init(ks["conv"], (_CONV_K, d)) * 0.1,
+        # RG-LRU gates
+        "w_a": dense_init(ks["a"], (d, d)),
+        "w_x": dense_init(ks["x_gate"], (d, d)),
+        "b_a": jnp.zeros((d,), jnp.float32),
+        "b_x": jnp.zeros((d,), jnp.float32),
+        # recurrence decay parameter Lambda (softplus-parameterized)
+        "lam": jnp.full((d,), 2.0, jnp.float32),
+        "w_out": dense_init(ks["out"], (d, d)),
+    }
+
+
+def _rglru_gates(p, x):
+    """a_t (decay) and gated input for the linear recurrence."""
+    dt = x.dtype
+    r = jax.nn.sigmoid((x @ p["w_a"].astype(dt)).astype(jnp.float32)
+                       + p["b_a"])
+    i = jax.nn.sigmoid((x @ p["w_x"].astype(dt)).astype(jnp.float32)
+                       + p["b_x"])
+    log_a = -_C_GATE * jax.nn.softplus(p["lam"]) * r       # (B,S,d) fp32
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _conv1d_causal(w, x, state=None):
+    """Depthwise causal conv, kernel K. x: (B,S,d). state: (B,K-1,d)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):]
+    return out, new_state
+
+
+def rglru_block(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    """Full-sequence recurrent block (train/prefill). x: (B,S,d)."""
+    dt = x.dtype
+    g = jax.nn.gelu(x @ p["w_in_g"].astype(dt))
+    h = x @ p["w_in_x"].astype(dt)
+    h, _ = _conv1d_causal(p["conv_w"], h)
+    a, b = _rglru_gates(p, h)
+
+    # h_t = a_t * h_{t-1} + b_t  - affine => associative scan over S
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hs = jax.lax.associative_scan(combine, (a.swapaxes(0, 1),
+                                               b.swapaxes(0, 1)))
+    y = hs.swapaxes(0, 1).astype(dt)
+    return (y * g) @ p["w_out"].astype(dt)
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    return {"h": jnp.zeros((batch, d), jnp.float32),
+            "conv": jnp.zeros((batch, _CONV_K - 1, d), dtype)}
+
+
+def rglru_decode(p, x, cfg: ModelConfig, state) -> Tuple[jnp.ndarray, Dict]:
+    """One-token step. x: (B,1,d)."""
+    dt = x.dtype
+    g = jax.nn.gelu(x @ p["w_in_g"].astype(dt))
+    h = x @ p["w_in_x"].astype(dt)
+    h, conv_state = _conv1d_causal(p["conv_w"], h, state["conv"])
+    a, b = _rglru_gates(p, h)
+    h_new = a[:, 0] * state["h"] + b[:, 0]
+    y = h_new[:, None, :].astype(dt)
+    out = (y * g) @ p["w_out"].astype(dt)
+    return out, {"h": h_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory cell)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.hd
+    ks = split_keys(key, ["q", "k", "v", "i", "f", "o", "out"])
+    return {
+        "wq": dense_init(ks["q"], (d, H * hd)),
+        "wk": dense_init(ks["k"], (d, H * hd)),
+        "wv": dense_init(ks["v"], (d, H * hd)),
+        "wi": dense_init(ks["i"], (d, H)),
+        "wf": dense_init(ks["f"], (d, H)),
+        "wo_gate": dense_init(ks["o"], (d, H * hd)),
+        "w_out": dense_init(ks["out"], (H * hd, d)),
+        "bf": jnp.full((H,), 3.0, jnp.float32),   # forget-open init
+        "bi": jnp.zeros((H,), jnp.float32),
+    }
+
+
+def _mlstm_qkv(p, x, cfg):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, H, hd) / jnp.sqrt(
+        jnp.float32(hd)).astype(dt)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, H, hd)
+    i_gate = ((x @ p["wi"].astype(dt)).astype(jnp.float32) + p["bi"])
+    f_gate = ((x @ p["wf"].astype(dt)).astype(jnp.float32) + p["bf"])
+    o_gate = jax.nn.sigmoid(x @ p["wo_gate"].astype(dt))
+    return q, k, v, i_gate, f_gate, o_gate
+
+
+def _mlstm_step(carry, inp):
+    """Stabilized mLSTM recurrence (one time step, batched).
+
+    carry: C (B,H,hd,hd), n (B,H,hd), m (B,H)
+    inp:   q,k,v (B,H,hd); i,f (B,H)
+    """
+    C, n, m = carry
+    q, k, v, i, f = inp
+    m_new = jnp.maximum(f + m, i)
+    fg = jnp.exp(f + m - m_new)[..., None]
+    ig = jnp.exp(i - m_new)[..., None]
+    C = fg[..., None] * C + ig[..., None] * (k[..., :, None] *
+                                             v[..., None, :])
+    n = fg * n + ig * k
+    h_num = jnp.einsum("bhij,bhi->bhj", C, q.astype(C.dtype))
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n,
+                                           q.astype(n.dtype))), 1.0)
+    h = h_num / h_den[..., None]
+    return (C, n, m_new), h
+
+
+def mlstm_block(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    dt = x.dtype
+    q, k, v, i, f, o = _mlstm_qkv(p, x, cfg)
+    q32, k32, v32 = (t.astype(jnp.float32).swapaxes(0, 1)
+                     for t in (q, k, v))
+    i32 = i.swapaxes(0, 1)
+    f32 = jax.nn.log_sigmoid(f).swapaxes(0, 1)
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), -jnp.inf, jnp.float32))
+    _, hs = chunked_scan(_mlstm_step, init, (q32, k32, v32, i32, f32))
+    h = hs.swapaxes(0, 1).astype(dt).reshape(B, S, H * hd)
+    return (h * o) @ p["w_out"].astype(dt)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.hd
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -jnp.inf, jnp.float32)}
+
+
+def mlstm_decode(p, x, cfg: ModelConfig, state) -> Tuple[jnp.ndarray, Dict]:
+    B = x.shape[0]
+    dt = x.dtype
+    q, k, v, i, f, o = _mlstm_qkv(p, x, cfg)
+    carry = (state["C"], state["n"], state["m"])
+    inp = (q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+           v[:, 0].astype(jnp.float32), i[:, 0],
+           jax.nn.log_sigmoid(f[:, 0]))
+    (C, n, m), h = _mlstm_step(carry, inp)
+    h = h.astype(dt).reshape(B, 1, -1)
+    out = (h * o) @ p["w_out"].astype(dt)
+    return out, {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory cell with exponential gating)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    d = cfg.d_model
+    ks = split_keys(key, ["z", "i", "f", "o", "out"])
+    return {
+        "wz": dense_init(ks["z"], (d, d)),
+        "wi": dense_init(ks["i"], (d, d)),
+        "wf": dense_init(ks["f"], (d, d)),
+        "wo_gate": dense_init(ks["o"], (d, d)),
+        "w_out": dense_init(ks["out"], (d, d)),
+        "bf": jnp.full((d,), 3.0, jnp.float32),
+    }
+
+
+def _slstm_step(carry, inp):
+    """carry: c,n,m (B,d); inp: z,i,f,o (B,d) fp32 (pre-activation)."""
+    c, n, m = carry
+    z, i, f, o = inp
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + m, i)
+    fg = jnp.exp(logf + m - m_new)
+    ig = jnp.exp(i - m_new)
+    c = fg * c + ig * jnp.tanh(z)
+    n = fg * n + ig
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new), h
+
+
+def _slstm_pre(p, x):
+    dt = x.dtype
+    z = (x @ p["wz"].astype(dt)).astype(jnp.float32)
+    i = (x @ p["wi"].astype(dt)).astype(jnp.float32)
+    f = (x @ p["wf"].astype(dt)).astype(jnp.float32) + p["bf"]
+    o = (x @ p["wo_gate"].astype(dt)).astype(jnp.float32)
+    return z, i, f, o
+
+
+def slstm_block(p, x, cfg: ModelConfig) -> jnp.ndarray:
+    B, S, d = x.shape
+    dt = x.dtype
+    z, i, f, o = _slstm_pre(p, x)
+    init = (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+            jnp.full((B, d), -jnp.inf, jnp.float32))
+    _, hs = chunked_scan(_slstm_step, init,
+                         tuple(t.swapaxes(0, 1) for t in (z, i, f, o)))
+    h = hs.swapaxes(0, 1).astype(dt)
+    return h @ p["w_out"].astype(dt)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -jnp.inf, jnp.float32)}
+
+
+def slstm_decode(p, x, cfg: ModelConfig, state) -> Tuple[jnp.ndarray, Dict]:
+    dt = x.dtype
+    z, i, f, o = _slstm_pre(p, x)
+    carry = (state["c"], state["n"], state["m"])
+    (c, n, m), h = _slstm_step(carry, (z[:, 0], i[:, 0], f[:, 0], o[:, 0]))
+    out = h[:, None, :].astype(dt) @ p["w_out"].astype(dt)
+    return out, {"c": c, "n": n, "m": m}

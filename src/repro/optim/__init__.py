@@ -1,0 +1,2 @@
+from repro.optim.adamw import Optimizer, OptimizerConfig, make_optimizer
+__all__ = ["Optimizer", "OptimizerConfig", "make_optimizer"]

@@ -1,0 +1,55 @@
+"""INT8 gradient compression with error feedback.
+
+For cross-pod data parallelism the gradient all-reduce crosses the slow DCI
+links; int8 quantization cuts those bytes 4x (vs f32 accumulators). Error
+feedback (Seide et al. / EF-SGD) keeps the residual locally and re-injects
+it next step, making the compression unbiased in the long run - the
+property test in tests/test_substrate.py checks the accumulated error stays
+bounded and training still converges on the tiny example.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def compress_leaf(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g32 = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_leaf(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: PyTree, error: PyTree
+                           ) -> Tuple[PyTree, PyTree]:
+    """Returns (decompressed grads as would survive the wire, new error).
+
+    The caller all-reduces the int8 payload; here we model the full
+    quantize -> transmit -> dequantize path so the train loop can use it
+    uniformly on any topology.
+    """
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_leaf(corrected)
+        deq = decompress_leaf(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    pairs = jax.tree.map(one, grads, error)
+    is_pair = lambda t: isinstance(t, tuple)
+    out_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    out_e = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return out_g, out_e

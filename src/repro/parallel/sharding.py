@@ -1,0 +1,234 @@
+"""Sharding rules: map every param/state/batch tensor to a PartitionSpec.
+
+Convention (DESIGN.md SS.6):
+  * batch dims            -> ("pod", "data") (whichever divide)
+  * matmul "wide" dims    -> "model" (tensor parallelism)
+  * matmul "narrow" dims  -> "data"  (FSDP-style parameter sharding)
+  * MoE expert dim        -> "model" (expert parallelism)
+  * scanned-stack leading dim, biases, norms -> replicated
+
+Rules are divisibility-guarded: a dim that does not divide its axis is
+replicated instead, so the same rules serve 16x16, 2x16x16 and tiny test
+meshes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        n = int(np.prod([_axis_size(mesh, a) for a in axis]))
+    else:
+        n = _axis_size(mesh, axis)
+    return dim % n == 0 and n > 1
+
+
+def _guard(shape, mesh: Mesh, *axes) -> P:
+    """PartitionSpec with divisibility fallback to replication per dim."""
+    spec = []
+    for dim, ax in zip(shape, axes):
+        spec.append(ax if _fits(dim, mesh, ax) else None)
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (keyed on param path names from repro.models.lm)
+# ---------------------------------------------------------------------------
+
+_MODEL_OUT = ("wq", "wk", "wv", "w_gate", "w_up", "w_in_x", "w_in_g",
+              "w_a", "w_x", "wz", "wi", "wf", "wo_gate", "lm_head")
+_MODEL_IN = ("wo", "w_down", "w_out")
+
+
+def param_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+               mesh: Mesh, scanned: bool, inference: bool = False) -> P:
+    """PartitionSpec for one parameter identified by its tree path.
+
+    ``inference=True`` drops the FSDP "data" factor (params replicated
+    across data ranks): without grads/optimizer the data-sharding only buys
+    capacity, and its per-matmul weight all-gathers dominated the decode
+    collective term (3.1 GiB/step measured on qwen decode)."""
+    name = path[-1]
+    lead: Tuple = (None,) if scanned else ()
+    body = shape[1:] if scanned else shape
+
+    def out(*axes) -> P:
+        if inference:
+            axes = tuple(None if a == "data" else a for a in axes)
+        return P(*lead, *_guard(body, mesh, *axes).__iter__())
+
+    if len(body) <= 1:
+        return out(None)
+    if name == "embed":
+        # vocab REPLICATED: a vocab-sharded table turns the token gather
+        # into a full-table all-gather + involuntary remat (observed);
+        # d_model-sharded rows keep the gather local.
+        return out(None, "model")
+    if name == "router":
+        return out("data", None)
+    if name in ("w_gate", "w_up", "w_down") and len(body) == 3:
+        # MoE experts: (E, d, f) / (E, f, d) - expert-parallel + FSDP
+        if name == "w_down":
+            return out("model", None, "data")
+        return out("model", "data", None)
+    if name == "conv_w":
+        return out(None, "model")
+    if name in _MODEL_OUT:
+        return out("data", "model")
+    if name in _MODEL_IN:
+        return out("model", "data")
+    return out(*([None] * len(body)))
+
+
+def params_shardings(params_abstract: PyTree, mesh: Mesh,
+                     inference: bool = False) -> PyTree:
+    """NamedShardings for a (possibly abstract) param pytree."""
+    def visit(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        scanned = "scan" in names
+        spec = param_spec(names, leaf.shape, mesh, scanned, inference)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params_abstract)
+
+
+def inference_fits_tp_only(params_abstract: PyTree, mesh: Mesh,
+                           budget_bytes: float = 8 * 2 ** 30) -> bool:
+    """True if TP-only residency (replicated over data) fits per device."""
+    total = sum(x.size * 2 for x in jax.tree_util.tree_leaves(
+        params_abstract))
+    return total / _axis_size(mesh, "model") <= budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# batch / activation / decode-state rules
+# ---------------------------------------------------------------------------
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard dim0 (batch) over pod x data when divisible."""
+    dp = dp_axes(mesh)
+    if dp and _fits(shape[0], mesh, dp):
+        return P(dp, *([None] * (len(shape) - 1)))
+    # try data only
+    if "data" in mesh.shape and _fits(shape[0], mesh, "data"):
+        return P("data", *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_abstract: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)),
+        batch_abstract)
+
+
+def decode_state_spec(path: Tuple[str, ...], shape: Tuple[int, ...],
+                      mesh: Mesh, scanned: bool) -> P:
+    """KV caches: (B, S, KV, hd) -> (dp, None, None, model-on-hd);
+    recurrent states: batch + widest dim on model."""
+    name = path[-1]
+    lead: Tuple = (None,) if scanned else ()
+    body = shape[1:] if scanned else shape
+    dp = dp_axes(mesh)
+    b_ax = dp if _fits(body[0], mesh, dp) else (
+        "data" if _fits(body[0], mesh, "data") else None)
+    if name in ("k", "v") and len(body) == 4:
+        # sequence-sharded KV: decode attention becomes distributed-softmax
+        # (local logits + tiny stat/PV reductions). hd-sharding instead
+        # makes SPMD all-gather the whole cache every layer (measured
+        # 3.1 GiB/step on qwen decode - EXPERIMENTS.md SS.Perf iter 1).
+        if _fits(body[1], mesh, "model"):
+            return P(*lead, b_ax, "model", None, None)
+        return P(*lead, b_ax, None, None,
+                 "model" if _fits(body[3], mesh, "model") else None)
+    if name == "C" and len(body) == 4:          # mLSTM (B,H,hd,hd)
+        return P(*lead, b_ax, None,
+                 "model" if _fits(body[2], mesh, "model") else None, None)
+    if len(body) >= 2:
+        last = "model" if _fits(body[-1], mesh, "model") else None
+        mid = [None] * (len(body) - 2)
+        return P(*lead, b_ax, *mid, last)
+    return P(*lead, b_ax)
+
+
+def decode_state_shardings(state_abstract: PyTree, mesh: Mesh) -> PyTree:
+    def visit(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        scanned = "scan" in names
+        spec = decode_state_spec(names, leaf.shape, mesh, scanned)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, state_abstract)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state rules (mirror parameter shardings)
+# ---------------------------------------------------------------------------
+
+
+def params_shardings_like(opt_abstract: PyTree, params_abstract: PyTree,
+                          pshard: PyTree, mesh: Mesh) -> PyTree:
+    """Shardings for optimizer state trees.
+
+    adam m/v mirror params exactly; adafactor vr drops the last dim of the
+    param spec, vc drops the second-to-last; scalars are replicated.
+    """
+    def drop_last(s: NamedSharding) -> NamedSharding:
+        spec = tuple(s.spec)
+        return NamedSharding(mesh, P(*spec[:-1])) if spec else s
+
+    def drop_second_last(s: NamedSharding) -> NamedSharding:
+        spec = tuple(s.spec)
+        if len(spec) >= 2:
+            return NamedSharding(mesh, P(*spec[:-2], spec[-1]))
+        return NamedSharding(mesh, P())
+
+    out = {}
+    for key, sub in opt_abstract.items():
+        if key in ("m", "v", "master"):
+            # ZeRO-style: moments/master are FSDP-sharded even when the
+            # compute params are TP-only (pshard may carry inference=True)
+            out[key] = jax.tree_util.tree_map_with_path(
+                lambda path, leaf: NamedSharding(mesh, param_spec(
+                    tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                          for p in path),
+                    leaf.shape, mesh,
+                    "scan" in tuple(str(getattr(p, "key", p))
+                                    for p in path))),
+                sub)
+        elif key == "vr":
+            out[key] = jax.tree.map(
+                lambda p, s: drop_last(s) if p.ndim >= 2
+                else NamedSharding(mesh, P(*tuple(s.spec))),
+                params_abstract, pshard)
+        elif key == "vc":
+            out[key] = jax.tree.map(
+                lambda p, s: drop_second_last(s) if p.ndim >= 2
+                else replicated(mesh),
+                params_abstract, pshard)
+        else:
+            out[key] = jax.tree.map(lambda _: replicated(mesh), sub)
+    return out

@@ -1,0 +1,45 @@
+"""Symmetric per-channel INT8 quantization - the "MRAM tier" weight format
+(DESIGN.md SS.3). Used by the HH-PIM serving runtime and the pim_mac kernel.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_per_channel(w: jnp.ndarray, axis: int = 0
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """w (float) -> (int8 values, float32 scales along `axis`-complement).
+
+    Symmetric: w ~= q * scale. Scales are per output column for a (d_in,
+    d_out) matrix with axis=0 (reduce over d_in).
+    """
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), jnp.squeeze(scale, axis=axis)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, axis: int = 0,
+               dtype=jnp.float32) -> jnp.ndarray:
+    s = jnp.expand_dims(scale, axis)
+    return (q.astype(jnp.float32) * s).astype(dtype)
+
+
+def quantize_activations(x: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-row (token) symmetric int8 activation quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def fake_quant(w: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Straight-through QAT helper: value of quant-dequant, gradient of
+    identity."""
+    q, s = quantize_per_channel(jax.lax.stop_gradient(w), axis)
+    deq = dequantize(q, s, axis, w.dtype)
+    return w + jax.lax.stop_gradient(deq - w)

@@ -1,0 +1,94 @@
+"""Batched decode engine with slot-based continuous batching.
+
+Requests occupy fixed batch slots; finished slots are refilled from the
+queue each step (decode-time continuous batching). The KV/recurrent state
+is allocated once at ``max_len`` and reused across requests per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 128):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self._slot_pos = np.zeros(max_batch, np.int32)
+        self._state = lm.init_decode_state(cfg, max_batch, max_len)
+        self._toks = jnp.zeros((max_batch,), jnp.int32)
+        self._step_fn = jax.jit(
+            lambda st, tk, pos: lm.decode_step(params, cfg, st, tk, pos))
+        self._pos = 0
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _fill_slots(self) -> None:
+        for i, s in enumerate(self.slots):
+            if (s is None or s.done) and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # feed the prompt one token at a time into this slot
+                toks = np.array(self._toks)
+                for t in req.prompt[:-1]:
+                    toks[i] = t
+                    self._toks = jnp.asarray(toks)
+                    _, self._state = self._step_fn(self._state, self._toks,
+                                                   jnp.int32(self._pos))
+                    self._pos += 1
+                toks[i] = req.prompt[-1]
+                self._toks = jnp.asarray(toks)
+
+    def step(self) -> Dict[int, int]:
+        """Decode one token for every active slot; returns {rid: token}."""
+        self._fill_slots()
+        if all(s is None or s.done for s in self.slots):
+            return {}
+        logits, self._state = self._step_fn(self._state, self._toks,
+                                            jnp.int32(self._pos))
+        self._pos += 1
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        out = {}
+        toks = np.asarray(self._toks).copy()
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            tok = int(nxt[i])
+            req.out.append(tok)
+            out[req.rid] = tok
+            toks[i] = tok
+            if len(req.out) >= req.max_new_tokens:
+                req.done = True
+        self._toks = jnp.asarray(toks)
+        return out
+
+    def run_until_done(self, max_steps: int = 1000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(s is None or s.done
+                                      for s in self.slots):
+                break
+            self.step()
+        return [s for s in self.slots if s is not None]

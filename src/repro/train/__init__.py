@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, default_optimizer_kind
+__all__ = ["make_train_step", "default_optimizer_kind"]

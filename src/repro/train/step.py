@@ -1,0 +1,85 @@
+"""jit-able training step: microbatched grad accumulation + optimizer.
+
+The microbatch loop is a ``lax.scan`` whose body ends in the gradient
+accumulation add - XLA's latency-hiding scheduler can overlap microbatch
+i's gradient reduce-scatter with microbatch i+1's compute (DESIGN.md SS.6).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.optim.adamw import Optimizer
+
+PyTree = Any
+
+
+def default_optimizer_kind(cfg: ModelConfig) -> str:
+    """Arctic-class models need factored moments to fit 16 GB/chip."""
+    if cfg.n_experts >= 64:
+        return "adafactor"
+    return "adamw"
+
+
+def default_train_memory_plan(cfg: ModelConfig, global_batch: int
+                              ) -> Dict[str, Any]:
+    """Microbatch count + grad-accumulation dtype per model scale."""
+    big = cfg.d_model >= 5120 or cfg.n_experts >= 16
+    micro = 16 if big else 8
+    while global_batch % micro:
+        micro //= 2
+    return {"num_microbatches": max(micro, 1),
+            "accum_dtype": jnp.bfloat16 if big else jnp.float32}
+
+
+def make_loss_fn(cfg: ModelConfig) -> Callable:
+    def loss(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer,
+                    num_microbatches: int = 1,
+                    accum_dtype=jnp.float32) -> Callable:
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params: PyTree, opt_state: PyTree, batch: PyTree
+                   ) -> Tuple[PyTree, PyTree, Dict[str, jnp.ndarray]]:
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                n = num_microbatches
+                return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (l, _m), g = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)),
+                                           micro)
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32)
+                           / num_microbatches).astype(accum_dtype), gsum)
+            loss = lsum / num_microbatches
+            metrics = {}
+
+        new_params, new_opt_state = opt.update(grads, opt_state, params)
+        out_metrics = {"loss": loss}
+        out_metrics.update({k: v for k, v in metrics.items()
+                            if k in ("aux",)})
+        return new_params, new_opt_state, out_metrics
+
+    return train_step

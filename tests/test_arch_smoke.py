@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step + one decode step on CPU; asserts shapes and no NaNs.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) - see repro.launch.dryrun.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+def _batch_for(cfg: ModelConfig, B=2, S=16, key=None):
+    key = key or jax.random.PRNGKey(0)
+    kt, kl, kp, ke = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jax.random.normal(
+            kp, (B, cfg.n_prefix_embeds, cfg.d_model), jnp.float32)
+    if cfg.is_encdec:
+        batch["enc_frames"] = jax.random.normal(
+            ke, (B, max(S // cfg.enc_len_divisor, 1), cfg.d_model),
+            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(jax.random.PRNGKey(1), cfg)
+    batch = _batch_for(cfg)
+    B, S = batch["tokens"].shape
+
+    logits, aux = jax.jit(
+        lambda p, b: lm.forward(p, cfg, b["tokens"],
+                                prefix_embeds=b.get("prefix_embeds"),
+                                enc_frames=b.get("enc_frames")))(params,
+                                                                 batch)
+    P = cfg.n_prefix_embeds if cfg.n_prefix_embeds else 0
+    assert logits.shape == (B, S + P, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: lm.loss_fn(p, cfg, batch)[0]))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+    # at least one nonzero gradient per model
+    assert any(float(jnp.abs(g).max()) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(jax.random.PRNGKey(2), cfg)
+    B, max_len = 2, 32
+    enc_out = None
+    if cfg.is_encdec:
+        frames = jax.random.normal(jax.random.PRNGKey(3),
+                                   (B, 8, cfg.d_model), jnp.float32)
+        enc_out = lm.encode(params, cfg, frames)
+    state = lm.init_decode_state(cfg, B, max_len, enc_out=enc_out)
+    toks = jnp.array([1, 2], dtype=jnp.int32)
+    step = jax.jit(lambda s, t, p: lm.decode_step(params, cfg, s, t, p))
+    for t in range(3):
+        logits, state = step(state, toks, jnp.int32(t))
+        assert logits.shape == (B, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["internlm2_1_8b", "recurrentgemma_2b",
+                                  "xlstm_1_3b"])
+def test_decode_matches_forward(arch):
+    """Step-by-step decode must agree with the full-sequence forward
+    (KV-cache / recurrent-state consistency)."""
+    cfg = get_smoke_config(arch)
+    params = lm.init_lm(jax.random.PRNGKey(4), cfg)
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0,
+                              cfg.vocab_size)
+    full_logits, _ = lm.forward(params, cfg, toks)
+    state = lm.init_decode_state(cfg, B, max_len=S)
+    outs = []
+    for t in range(S):
+        lg, state = lm.decode_step(params, cfg, state, toks[:, t],
+                                   jnp.int32(t))
+        outs.append(lg)
+    step_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step_logits, np.float32),
+                               np.asarray(full_logits, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_full_configs_match_assignment():
+    """Exact structural constants from the assignment table."""
+    spec = {
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen25_32b": (64, 5120, 40, 8, 27648, 152064),
+        "internlm2_1_8b": (24, 2048, 16, 8, 8192, 92544),
+        "chatglm3_6b": (28, 4096, 32, 2, 13696, 65024),
+        "phi3_medium_14b": (40, 5120, 40, 10, 17920, 100352),
+        "xlstm_1_3b": (48, 2048, 4, 4, 0, 50304),
+        "pixtral_12b": (40, 5120, 32, 8, 14336, 131072),
+        "arctic_480b": (35, 7168, 56, 8, 4864, 32000),
+        "llama4_scout_17b_a16e": (48, 5120, 40, 8, 8192, 202048),
+        "seamless_m4t_medium": (12, 1024, 16, 16, 4096, 256206),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.n_heads == H, arch
+        assert cfg.n_kv_heads == kv, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == V, arch
+    assert get_config("arctic_480b").n_experts == 128
+    assert get_config("arctic_480b").experts_per_token == 2
+    assert get_config("llama4_scout_17b_a16e").n_experts == 16
+    assert get_config("llama4_scout_17b_a16e").experts_per_token == 1
+    # sub-quadratic flags drive the long_500k skip rule
+    assert get_config("recurrentgemma_2b").is_subquadratic
+    assert get_config("xlstm_1_3b").is_subquadratic
+    assert not get_config("qwen25_32b").is_subquadratic

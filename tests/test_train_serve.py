@@ -1,0 +1,161 @@
+"""Integration tests: trainer loop (+ resume, compression), decode engine,
+and the HH-PIM hetero serving runtime."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.data.synthetic import DataConfig
+from repro.models import lm
+from repro.models.common import ModelConfig, reduced
+from repro.models.hetero_linear import (fractions_to_counts, split_weight,
+                                        tiered_matmul)
+from repro.optim.adamw import OptimizerConfig
+from repro.serve.engine import DecodeEngine, Request
+from repro.serve.hetero import HeteroServeEngine, tpu_arch, tpu_model_spec
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def _tiny_cfg():
+    return ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                       n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                       head_dim=16, dtype=jnp.float32, scan_layers=False,
+                       remat=False)
+
+
+def _tiny_trainer(tmp_path=None, steps=30, compression=False, seed=0):
+    cfg = _tiny_cfg()
+    return Trainer(
+        cfg,
+        OptimizerConfig(lr=3e-3, warmup_steps=5, total_steps=steps,
+                        weight_decay=0.0),
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
+                   seed=seed),
+        TrainerConfig(steps=steps, ckpt_every=10,
+                      ckpt_dir=str(tmp_path) if tmp_path else None,
+                      grad_compression=compression))
+
+
+def test_trainer_loss_decreases(tmp_path):
+    out = _tiny_trainer(tmp_path).run()
+    assert out["final_loss"] < out["first_loss"] * 0.9
+    assert out["steps"] == 30
+
+
+def test_trainer_resume_continuity(tmp_path):
+    t1 = _tiny_trainer(tmp_path, steps=20)
+    t1.run()
+    t1._ckpt.wait()
+    # new process-equivalent: fresh trainer resumes from step 20 checkpoint
+    t2 = _tiny_trainer(tmp_path, steps=25)
+    assert t2.maybe_resume()
+    assert t2.step == 20
+    out = t2.run()
+    assert out["steps"] == 25
+
+
+def test_trainer_preemption_stop(tmp_path):
+    t = _tiny_trainer(tmp_path, steps=1000)
+    orig_step = t._jit_step
+
+    def stepper(*a, **k):
+        if t.step >= 5:
+            t.request_stop()
+        return orig_step(*a, **k)
+
+    t._jit_step = stepper
+    out = t.run()
+    assert out["steps"] <= 7      # stopped promptly
+    t._ckpt.wait()
+    from repro.checkpoint import ckpt
+    assert ckpt.latest_step(tmp_path) == out["steps"]
+
+
+def test_trainer_with_compression_converges(tmp_path):
+    base = _tiny_trainer(None, steps=30, seed=1).run()
+    comp = _tiny_trainer(None, steps=30, compression=True, seed=1).run()
+    assert comp["final_loss"] < comp["first_loss"] * 0.9
+    # compressed path tracks the uncompressed one loosely
+    assert comp["final_loss"] < base["final_loss"] * 1.5 + 0.5
+
+
+# -- serving -------------------------------------------------------------------
+
+
+def test_decode_engine_serves_batched_requests():
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=4, max_len=64)
+    for r in range(6):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2, 3], max_new_tokens=5))
+    eng.run_until_done()
+    done = [r for r in eng.slots if r is not None] + eng.queue
+    assert all(len(r.out) == 5 for r in done if r.done)
+    assert sum(r.done for r in done) >= 4
+
+
+def test_tiered_matmul_matches_dense():
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.5, (32, 64)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (4, 32)), jnp.float32)
+    counts = {"hp_bf16": 16, "hp_int8": 16, "lp_bf16": 16, "lp_int8": 16}
+    segs = split_weight(w, counts)
+    y = tiered_matmul(x, segs)
+    ref = x @ w
+    # int8 segments introduce bounded quantization error
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.08
+
+
+def test_tiered_all_bf16_is_near_exact():
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(0, 0.5, (16, 24)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (3, 16)), jnp.float32)
+    segs = split_weight(w, {"hp_bf16": 12, "hp_int8": 0, "lp_bf16": 12,
+                            "lp_int8": 0})
+    y = tiered_matmul(x, segs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=3e-2,
+                               atol=3e-2)   # bf16 rounding only
+
+
+def test_hetero_engine_adapts_and_meets_deadlines():
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(1), cfg)
+    eng = HeteroServeEngine(cfg, params, t_slice_ms=200.0, max_batch=4)
+    hi = eng.run_slice(8)
+    lo = eng.run_slice(1)
+    lo2 = eng.run_slice(1)
+    assert hi.report.deadline_met and lo.report.deadline_met
+    # placement adapts: low load shifts weight share to the LP pool
+    hp_hi = sum(v for k, v in hi.report.placement.items()
+                if k.startswith("hp"))
+    hp_lo = sum(v for k, v in lo2.report.placement.items()
+                if k.startswith("hp"))
+    assert hp_lo <= hp_hi
+    # per-task energy lower at low load
+    e_hi = hi.report.energy_pj / hi.report.n_tasks
+    e_lo = lo2.report.energy_pj / lo2.report.n_tasks
+    assert e_lo < e_hi * 1.5
+    assert eng.energy_uj() > 0
+    # the tiered weights actually changed format
+    assert eng._tiered is not None
+    x = jnp.ones((2, cfg.d_model), jnp.float32)
+    y = eng.tiered_forward(x)
+    assert y.shape == (2, cfg.d_ff)
+
+
+def test_tpu_arch_spaces_sane():
+    arch = tpu_arch(4, 4)
+    names = {s.name for s in arch.spaces}
+    assert names == {"hp_mram", "hp_sram", "lp_mram", "lp_sram"}
+    hp_s = arch.cluster("hp").space("sram")
+    hp_m = arch.cluster("hp").space("mram")
+    # bf16 reads twice the bytes of int8
+    assert hp_s.mem.read_ns == pytest.approx(2 * hp_m.mem.read_ns)
+    # volatile bf16 residency pins idle power; int8 sleeps
+    assert hp_s.mem.volatile and not hp_m.mem.volatile
+    assert hp_s.mem.static_mw > hp_m.mem.static_mw
+    # LP pool is slower per op
+    lp = tpu_arch(4, 4).cluster("lp")
+    assert lp.pe.op_ns > arch.cluster("hp").pe.op_ns
