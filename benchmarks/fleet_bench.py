@@ -1,0 +1,137 @@
+"""Fleet benchmark: trace x fleet-size x forecaster sweep.
+
+Runs the analytic fleet (scheduler + energy model, no token decode) over
+bursty and steady arrival traces, several fleet sizes and every
+forecaster, averaging each cell over seeds. Emits one row per cell plus
+headline comparisons (same shape as ``benchmarks/paper_tables.py``:
+(rows, derived)), and writes everything to
+``benchmarks/results/fleet_bench.json``.
+
+The claim under test is the fleet-scale version of the paper's Fig. 4/5
+story: consulting the placement LUT on a *forecast* of next-slice load
+(proactive migration) beats the paper's reactive lookup on bursty
+traffic - lower deadline-miss-rate at a modest energy-per-token premium.
+
+Run: ``PYTHONPATH=src python -m benchmarks.fleet_bench`` (or
+``python benchmarks/fleet_bench.py``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.fleet import build_fleet, summarize
+from repro.fleet.traces import BURSTY, make_trace
+
+SEEDS = (0, 1, 2)
+ENGINES = (1, 2)
+FORECASTERS = ("none", "ewma", "ar1", "holt")
+MARGIN = 1.3                  # over-provisioning factor for forecasters
+TOKENS_PER_TASK = 2
+N_SLICES = 40
+
+# per-engine rates; scaled by fleet size so offered load per engine is
+# constant across fleet sizes
+TRACE_GRID: Dict[str, Dict] = {
+    "mmpp": dict(rate_low=2, rate_high=12, p_down=0.25),
+    "flash": dict(base=2, spike=14, decay=0.75),
+    "ramp": dict(start=1, end=12),
+    "diurnal": dict(base=2, peak=9),
+    "poisson": dict(rate=5),
+}
+_SCALED = {  # which kwargs scale with engine count
+    "mmpp": ("rate_low", "rate_high"),
+    "flash": ("base", "spike"),
+    "ramp": ("start", "end"),
+    "diurnal": ("base", "peak"),
+    "poisson": ("rate",),
+}
+
+
+def _cell(trace_name: str, n_engines: int, forecaster: str) -> Dict:
+    miss, p95, etok, migr = [], [], [], []
+    for seed in SEEDS:
+        kw = dict(TRACE_GRID[trace_name])
+        for k in _SCALED[trace_name]:
+            kw[k] = kw[k] * n_engines
+        tr = make_trace(trace_name, n_slices=N_SLICES, seed=seed, **kw)
+        fleet = build_fleet(
+            n_engines=n_engines, forecaster=forecaster,
+            tokens_per_task=TOKENS_PER_TASK,
+            forecast_margin=1.0 if forecaster == "none" else MARGIN)
+        s = summarize(fleet.run(tr))
+        miss.append(s.deadline_miss_rate)
+        p95.append(s.p95_ms)
+        etok.append(s.energy_per_token_uj)
+        migr.append(s.migrations)
+    return {
+        "trace": trace_name,
+        "engines": n_engines,
+        "forecaster": forecaster,
+        "miss_rate": round(float(np.mean(miss)), 4),
+        "p95_us": round(float(np.mean(p95)) * 1e3, 3),
+        "energy_per_token_uj": round(float(np.mean(etok)), 3),
+        "migrating_slices": round(float(np.mean(migr)), 1),
+        "seeds": len(SEEDS),
+    }
+
+
+def fleet_sweep() -> Tuple[List[Dict], Dict]:
+    rows = [
+        _cell(trace, n, fc)
+        for trace in TRACE_GRID
+        for n in ENGINES
+        for fc in FORECASTERS
+    ]
+
+    derived: Dict = {}
+    wins = {}
+    for trace in TRACE_GRID:
+        for n in ENGINES:
+            cell = {r["forecaster"]: r for r in rows
+                    if r["trace"] == trace and r["engines"] == n}
+            base = cell["none"]
+            best = min((cell[f] for f in FORECASTERS if f != "none"),
+                       key=lambda r: r["miss_rate"])
+            key = f"{trace}_x{n}"
+            derived[f"{key}_miss_none"] = base["miss_rate"]
+            derived[f"{key}_miss_best"] = best["miss_rate"]
+            derived[f"{key}_best_forecaster"] = best["forecaster"]
+            if trace in BURSTY:
+                for f in FORECASTERS[1:]:
+                    wins.setdefault(f, {})[key] = (
+                        cell[f]["miss_rate"] < base["miss_rate"])
+    # the headline gate is strict: ONE fixed forecaster must beat the
+    # reactive baseline on a majority of bursty cells (a post-hoc
+    # best-of-N pick on a single lucky cell would not count)
+    majority = {f: sum(w.values()) > len(w) / 2 for f, w in wins.items()}
+    derived["forecast_beats_reactive_on_bursty"] = any(majority.values())
+    derived["majority_winning_forecasters"] = sorted(
+        f for f, ok in majority.items() if ok)
+    derived["bursty_wins"] = {
+        f: sorted(k for k, v in w.items() if v) for f, w in wins.items()}
+    return rows, derived
+
+
+def main() -> None:
+    out_dir = Path(__file__).parent / "results"
+    out_dir.mkdir(exist_ok=True)
+    t0 = time.perf_counter()
+    rows, derived = fleet_sweep()
+    us = (time.perf_counter() - t0) * 1e6
+    with open(out_dir / "fleet_bench.json", "w") as f:
+        json.dump({"rows": rows, "derived": derived}, f, indent=2)
+    print("name,us_per_call,derived")
+    print(f"fleet_sweep,{us:.0f},{json.dumps(derived)}")
+    for r in rows:
+        print(f"  {r['trace']:8s} x{r['engines']} {r['forecaster']:5s} "
+              f"miss={r['miss_rate']:.3f} p95={r['p95_us']:.2f}us "
+              f"e/tok={r['energy_per_token_uj']:.2f}uJ")
+
+
+if __name__ == "__main__":
+    main()

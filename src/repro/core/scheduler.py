@@ -29,10 +29,21 @@ class SliceReport:
     moved_weights: int
     t_move_ns: float
     e_move_pj: float
-    t_exec_ns: float             # n_tasks * t_task
+    t_exec_ns: float             # n_executed * t_task
     e_dyn_pj: float
     e_static_pj: float
     deadline_met: bool
+    # tasks actually run this slice; < n_tasks only under capacity capping
+    # (fleet serving), where the remainder carries over to the next slice.
+    n_executed: Optional[int] = None
+
+    @property
+    def n_done(self) -> int:
+        return self.n_tasks if self.n_executed is None else self.n_executed
+
+    @property
+    def t_task_ns(self) -> float:
+        return self.t_exec_ns / self.n_done if self.n_done else 0.0
 
     @property
     def energy_pj(self) -> float:
@@ -88,29 +99,42 @@ class TimeSliceScheduler:
         return self._lut_cache[key]
 
     # -- one slice ----------------------------------------------------------
-    def step(self, n_tasks: int) -> SliceReport:
+    def step(self, n_tasks: int, *, lookup_tasks: Optional[int] = None,
+             cap_to_capacity: bool = False) -> SliceReport:
+        """Execute one time slice with ``n_tasks`` buffered tasks.
+
+        ``lookup_tasks`` (fleet forecasting hook): consult the placement LUT
+        as if this many tasks were due, instead of the actual backlog. A
+        forecaster predicting next-slice load can thereby trigger *proactive*
+        weight migration during a quiet slice, before the burst lands.
+
+        ``cap_to_capacity``: execute only as many tasks as fit inside the
+        slice under the chosen placement (``n_executed`` in the report); the
+        caller carries the remainder into the next slice. Default keeps the
+        paper semantics (whole backlog runs, deadline possibly missed).
+        """
         T = self.t_slice_ns
-        n_eff = max(n_tasks, 1)
+        n_plan = max(lookup_tasks if lookup_tasks is not None else n_tasks, 1)
         lut = self.lut
 
         # pass 1: ignore movement; pass 2: subtract its overhead (paper:
         # "the calculation of t_constraint at runtime incorporates the data
         # movement overhead").
-        entry = lut.lookup(T / n_eff)
+        entry = lut.lookup(T / n_plan)
         t_move_c, e_move = self.em.movement_cost(self.placement,
                                                  entry.placement)
         t_move = max(t_move_c.values(), default=0.0)
         if t_move > 0:
-            entry2 = lut.lookup(max(T - t_move, 0.0) / n_eff)
+            entry2 = lut.lookup(max(T - t_move, 0.0) / n_plan)
             t_move_c2, e_move2 = self.em.movement_cost(self.placement,
                                                        entry2.placement)
             t_move2 = max(t_move_c2.values(), default=0.0)
-            if n_tasks * entry2.t_task_ns + t_move2 <= T + 1e-9:
+            if n_plan * entry2.t_task_ns + t_move2 <= T + 1e-9:
                 entry, t_move, e_move = entry2, t_move2, e_move2
             # if even the refined choice cannot absorb the migration this
             # slice, keep the current placement when it meets the deadline
             # on its own ("no inference delay due to data movement").
-            elif (n_tasks * self.em.task_cost(self.placement).t_task_ns
+            elif (n_plan * self.em.task_cost(self.placement).t_task_ns
                   <= T + 1e-9):
                 entry = None
 
@@ -123,15 +147,22 @@ class TimeSliceScheduler:
                     for k in {*new_placement, *self.placement})
 
         cost = self.em.task_cost(new_placement)
-        t_exec = n_tasks * cost.t_task_ns
-        busy = {c: t * n_tasks for c, t in cost.t_cluster_ns.items()}
-        e_dyn = n_tasks * cost.e_dyn_task_pj
+        n_run = n_tasks
+        if cap_to_capacity and cost.t_task_ns > 0:
+            capacity = int((T - t_move + 1e-6) // cost.t_task_ns)
+            n_run = min(n_tasks, max(capacity, 0))
+        t_exec = n_run * cost.t_task_ns
+        busy = {c: t * n_run for c, t in cost.t_cluster_ns.items()}
+        e_dyn = n_run * cost.e_dyn_task_pj
         e_static = self.em.static_energy_pj(new_placement, T, busy)
-        deadline_met = (t_exec + t_move) <= T + 1e-6
+        deadline_met = (n_tasks * cost.t_task_ns + t_move) <= T + 1e-6
 
-        rep = SliceReport(self._idx, n_tasks, T / n_eff, new_placement,
-                          moved, t_move, e_move, t_exec, e_dyn, e_static,
-                          deadline_met)
+        # t_constraint reflects the load the LUT was actually consulted
+        # with (the forecast under lookup_tasks), so reports explain the
+        # recorded placement
+        rep = SliceReport(self._idx, n_tasks, T / n_plan,
+                          new_placement, moved, t_move, e_move, t_exec,
+                          e_dyn, e_static, deadline_met, n_executed=n_run)
         self.placement = new_placement
         self._idx += 1
         return rep

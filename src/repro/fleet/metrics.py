@@ -1,0 +1,84 @@
+"""Fleet-level serving metrics.
+
+Aggregates a :class:`~repro.fleet.router.FleetResult` into the numbers the
+paper's evaluation cares about, lifted to fleet scale: tail latency
+(p50/p95/p99), energy per decoded token, deadline-miss rate against the
+<= 2T operational SLO, and weight-migration counts (placement churn).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.fleet.router import FleetResult
+
+
+def percentile(xs: Sequence[float], q: float) -> float:
+    if not len(xs):
+        return float("nan")
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+@dataclasses.dataclass
+class FleetSummary:
+    trace: str
+    n_slices: int
+    n_engines: int
+    n_submitted: int
+    n_completed: int
+    n_rejected: int
+    n_unfinished: int
+    p50_ms: float
+    p95_ms: float
+    p99_ms: float
+    mean_ms: float
+    slo_ms: float
+    deadline_miss_rate: float     # SLO violations (+ rejections) / submitted
+    energy_uj: float
+    energy_per_token_uj: float
+    tokens: int
+    migrations: int               # slices where weights actually moved
+    weights_moved: int
+    mean_backlog: float
+    peak_backlog: int
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def summarize(res: FleetResult) -> FleetSummary:
+    lat_ms = [r.latency_ns / 1e6 for r in res.completed]
+    slo_ms = res.slo_ns / 1e6
+    n_sub = (len(res.completed) + len(res.rejected)
+             + len(res.unfinished))
+    # rejected and never-finished requests both count against the SLO
+    misses = (sum(l > slo_ms for l in lat_ms) + len(res.rejected)
+              + len(res.unfinished))
+    all_reports = [r for reps in res.reports.values() for r in reps]
+    energy_pj = sum(r.energy_pj for r in all_reports)
+    tokens = sum(r.tokens for r in res.completed)
+    backlogs = [r.n_tasks for r in all_reports]
+    return FleetSummary(
+        trace=res.trace,
+        n_slices=res.n_slices,
+        n_engines=len(res.reports),
+        n_submitted=n_sub,
+        n_completed=len(res.completed),
+        n_rejected=len(res.rejected),
+        n_unfinished=len(res.unfinished),
+        p50_ms=percentile(lat_ms, 50),
+        p95_ms=percentile(lat_ms, 95),
+        p99_ms=percentile(lat_ms, 99),
+        mean_ms=float(np.mean(lat_ms)) if lat_ms else float("nan"),
+        slo_ms=slo_ms,
+        deadline_miss_rate=misses / n_sub if n_sub else 0.0,
+        energy_uj=energy_pj * 1e-6,
+        energy_per_token_uj=(energy_pj * 1e-6 / tokens) if tokens else 0.0,
+        tokens=tokens,
+        migrations=sum(r.moved_weights > 0 for r in all_reports),
+        weights_moved=sum(r.moved_weights for r in all_reports),
+        mean_backlog=float(np.mean(backlogs)) if backlogs else 0.0,
+        peak_backlog=max(backlogs) if backlogs else 0,
+    )

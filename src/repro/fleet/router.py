@@ -1,0 +1,223 @@
+"""SLO-aware request routing across a pool of serve engines.
+
+One :class:`EngineWorker` = one HH-PIM serve engine: a
+``TimeSliceScheduler`` re-solving weight placement every slice (the paper's
+per-device loop), plus a per-engine :class:`~repro.fleet.forecast.Forecaster`
+feeding the scheduler's ``lookup_tasks`` hook so migrations happen
+*proactively*, and optionally a real ``HeteroServeEngine`` so placement
+changes are functionally exercised (weights re-tiered, tokens decoded).
+
+The fleet runs the paper's buffering discipline at pool scale: requests
+arriving during slice ``s`` are dispatched to a worker's backlog and become
+executable in slice ``s+1``; each slice a worker drains as much backlog as
+fits its current placement's capacity (``cap_to_capacity``), carrying the
+rest. A request's latency is measured from the start of its arrival slice
+to its completion instant inside its execution slice, so the paper's <= 2T
+operational-latency bound is exactly the default SLO (``slo_slices=2``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.scheduler import SliceReport, TimeSliceScheduler
+from repro.fleet.forecast import Forecaster, NoForecast
+from repro.fleet.traces import Trace
+
+POLICIES = ("round_robin", "least_loaded", "slo")
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    rid: int
+    arrival_slice: int
+    tokens: int = 8               # decoded tokens = one scheduler task
+    worker: Optional[int] = None
+    finish_slice: Optional[int] = None
+    latency_ns: Optional[float] = None
+    rejected: bool = False
+
+
+class EngineWorker:
+    """One engine of the fleet: scheduler + forecaster + backlog queue."""
+
+    def __init__(self, wid: int, sched: TimeSliceScheduler,
+                 forecaster: Optional[Forecaster] = None, *,
+                 hetero=None, forecast_margin: float = 1.0):
+        self.wid = wid
+        self.sched = sched
+        self.forecaster = forecaster or NoForecast()
+        self.hetero = hetero              # optional HeteroServeEngine
+        self.forecast_margin = forecast_margin
+        self.backlog: List[FleetRequest] = []
+        self.reports: List[SliceReport] = []
+        self.tokens_decoded = 0
+        self._arrived_this_slice = 0
+
+    # -- routing signals ---------------------------------------------------
+    @property
+    def t_slice_ns(self) -> float:
+        return self.sched.t_slice_ns
+
+    def t_task_est_ns(self) -> float:
+        """Per-task time under the worker's CURRENT placement (what a newly
+        routed request would experience before any re-placement)."""
+        return self.sched.em.task_cost(self.sched.placement).t_task_ns
+
+    def expected_wait_slices(self, extra: int = 0) -> float:
+        """Backlog drain time, in slices, if `extra` more tasks were added."""
+        t = self.t_task_est_ns()
+        if t <= 0:
+            return 0.0
+        return (len(self.backlog) + extra) * t / self.t_slice_ns
+
+    # -- per-slice protocol ------------------------------------------------
+    def enqueue(self, req: FleetRequest) -> None:
+        req.worker = self.wid
+        self.backlog.append(req)
+        self._arrived_this_slice += 1
+
+    def end_of_slice(self) -> None:
+        """Feed this slice's arrival count to the forecaster."""
+        self.forecaster.observe(self._arrived_this_slice)
+        self._arrived_this_slice = 0
+
+    def step(self, slice_idx: int) -> List[FleetRequest]:
+        """Execute one slice against the buffered backlog; returns the
+        requests completed this slice (latency stamped)."""
+        n_backlog = len(self.backlog)
+        pred = int(math.ceil(self.forecaster.predict()
+                             * self.forecast_margin))
+        lookup = max(n_backlog, pred)
+        rep = self.sched.step(n_backlog, lookup_tasks=lookup,
+                              cap_to_capacity=True)
+        self.reports.append(rep)
+        n_done = rep.n_done
+        done, self.backlog = self.backlog[:n_done], self.backlog[n_done:]
+        T = self.t_slice_ns
+        t_task = rep.t_task_ns
+        for i, req in enumerate(done):
+            req.finish_slice = slice_idx
+            req.latency_ns = ((slice_idx - req.arrival_slice) * T
+                              + rep.t_move_ns + (i + 1) * t_task)
+            self.tokens_decoded += req.tokens
+        if self.hetero is not None:
+            self.hetero.apply_placement(rep.placement)
+            if n_done:
+                self.hetero.decode(n_done)
+        return done
+
+
+class FleetRouter:
+    """Dispatches arrivals to workers; optionally rejects (admission
+    control) when every queue is past ``admission_limit`` tasks."""
+
+    def __init__(self, workers: Sequence[EngineWorker],
+                 policy: str = "slo",
+                 admission_limit: Optional[int] = None):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; one of {POLICIES}")
+        self.workers = list(workers)
+        self.policy = policy
+        self.admission_limit = admission_limit
+        self._rr = 0
+
+    def _score(self, w: EngineWorker) -> float:
+        if self.policy == "least_loaded":
+            return len(w.backlog)
+        # "slo": expected completion time of the new request, in slices,
+        # normalizing out heterogeneous engine speeds
+        return w.expected_wait_slices(1)
+
+    def _admits(self, i: int) -> bool:
+        return (self.admission_limit is None
+                or len(self.workers[i].backlog) < self.admission_limit)
+
+    def route(self, req: FleetRequest) -> bool:
+        """Assign ``req`` to a worker; False => rejected by admission (only
+        when EVERY queue is at the limit - a full preferred worker falls
+        back to the best still-admitting one). Backlogs update as each
+        request is enqueued, so scores stay fresh within a slice."""
+        n = len(self.workers)
+        if self.policy == "round_robin":
+            order = [(self._rr + k) % n for k in range(n)]
+            self._rr = (self._rr + 1) % n
+        else:
+            order = sorted(range(len(self.workers)),
+                           key=lambda j: (self._score(self.workers[j]), j))
+        i = next((j for j in order if self._admits(j)), None)
+        if i is None:
+            req.rejected = True
+            return False
+        self.workers[i].enqueue(req)
+        return True
+
+
+@dataclasses.dataclass
+class FleetResult:
+    trace: str
+    completed: List[FleetRequest]
+    rejected: List[FleetRequest]
+    # still queued when the drain cutoff fired (overload); counted as SLO
+    # misses by metrics.summarize so saturation cannot deflate miss rates
+    unfinished: List[FleetRequest]
+    reports: Dict[int, List[SliceReport]]   # worker id -> per-slice reports
+    t_slice_ns: float
+    slo_ns: float
+    n_slices: int
+
+
+class Fleet:
+    """Trace-driven multi-engine serving loop."""
+
+    def __init__(self, workers: Sequence[EngineWorker], *,
+                 policy: str = "slo",
+                 admission_limit: Optional[int] = None,
+                 slo_slices: float = 2.0,
+                 tokens_per_request: int = 8):
+        if not workers:
+            raise ValueError("fleet needs at least one worker")
+        self.workers = list(workers)
+        self.router = FleetRouter(self.workers, policy=policy,
+                                  admission_limit=admission_limit)
+        self.slo_slices = slo_slices
+        self.tokens_per_request = tokens_per_request
+        self._rid = itertools.count()
+
+    def run(self, trace: Trace, *, max_drain_slices: int = 200,
+            verbose_cb=None) -> FleetResult:
+        completed: List[FleetRequest] = []
+        rejected: List[FleetRequest] = []
+        s = 0
+        n_slices = len(trace.arrivals)
+        while True:
+            draining = s >= n_slices
+            if draining and (all(not w.backlog for w in self.workers)
+                             or s >= n_slices + max_drain_slices):
+                break
+            # 1) execute the backlog buffered from earlier slices
+            done_now: List[FleetRequest] = []
+            for w in self.workers:
+                done_now.extend(w.step(s))
+            completed.extend(done_now)
+            # 2) dispatch this slice's arrivals (executable next slice)
+            n_arr = trace.arrivals[s] if not draining else 0
+            for _ in range(n_arr):
+                req = FleetRequest(rid=next(self._rid), arrival_slice=s,
+                                   tokens=self.tokens_per_request)
+                if not self.router.route(req):
+                    rejected.append(req)
+            for w in self.workers:
+                w.end_of_slice()
+            if verbose_cb is not None:
+                verbose_cb(s, n_arr, done_now, self.workers)
+            s += 1
+        T = self.workers[0].t_slice_ns
+        unfinished = [r for w in self.workers for r in w.backlog]
+        return FleetResult(
+            trace=trace.name, completed=completed, rejected=rejected,
+            unfinished=unfinished,
+            reports={w.wid: w.reports for w in self.workers},
+            t_slice_ns=T, slo_ns=self.slo_slices * T, n_slices=s)

@@ -1,0 +1,112 @@
+"""Fleet serving launcher: ``python -m repro.launch.fleet``.
+
+Runs a trace-driven multi-engine serving fleet: N HH-PIM serve engines
+(TPU parameterization), per-engine load forecasting driving proactive
+weight migration, SLO-aware routing with optional admission control.
+
+    python -m repro.launch.fleet --trace mmpp --engines 2 --requests 32
+
+With ``--decode`` (default) every worker carries a real
+``HeteroServeEngine``: each slice's placement is applied as an actual
+weight re-tiering and tokens are decoded through the tiered model on CPU.
+``--no-decode`` runs the analytic scheduler/energy path only (fast; what
+``benchmarks/fleet_bench.py`` sweeps).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.fleet import build_fleet, make_trace, summarize
+from repro.fleet.forecast import FORECASTERS
+from repro.fleet.router import POLICIES
+from repro.fleet.traces import TRACES
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", default="mmpp",
+                    help=f"one of {sorted(TRACES)} or a case* scenario")
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=None,
+                    help="total request budget (truncates the trace)")
+    ap.add_argument("--steps", type=int, default=25,
+                    help="number of trace time slices")
+    ap.add_argument("--forecaster", default="ewma",
+                    choices=sorted(FORECASTERS))
+    ap.add_argument("--policy", default="slo", choices=POLICIES)
+    ap.add_argument("--margin", type=float, default=1.0,
+                    help="forecast over-provisioning factor")
+    ap.add_argument("--admission-limit", type=int, default=None,
+                    help="max queued tasks per engine before rejecting")
+    ap.add_argument("--mixed", action="store_true",
+                    help="heterogeneous pool: odd engines get half chips")
+    ap.add_argument("--tokens-per-task", type=int, default=2)
+    ap.add_argument("--arch", default="internlm2_1_8b")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--decode", dest="decode", action="store_true",
+                    default=True)
+    ap.add_argument("--no-decode", dest="decode", action="store_false")
+    ap.add_argument("--json", default=None,
+                    help="write the summary to this path as JSON")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    trace = make_trace(args.trace, n_slices=args.steps, seed=args.seed)
+    if args.requests is not None:
+        trace = trace.truncated(args.requests)
+
+    params = cfg = None
+    if args.decode:
+        import jax
+        from repro.configs import canonical, get_smoke_config
+        from repro.models import lm
+        cfg = get_smoke_config(args.arch)
+        params = lm.init_lm(jax.random.PRNGKey(args.seed), cfg)
+        print(f"arch={canonical(args.arch)} ({cfg.n_layers}L "
+              f"d={cfg.d_model}, reduced config)")
+
+    fleet = build_fleet(
+        cfg, n_engines=args.engines, forecaster=args.forecaster,
+        policy=args.policy, mixed=args.mixed,
+        tokens_per_task=args.tokens_per_task,
+        admission_limit=args.admission_limit,
+        forecast_margin=args.margin, params=params, decode=args.decode)
+
+    T_us = fleet.workers[0].t_slice_ns / 1e3
+    print(f"fleet: {args.engines} engines{' (mixed)' if args.mixed else ''}"
+          f", policy={args.policy}, forecaster={args.forecaster}, "
+          f"t_slice={T_us:.2f} us, trace={trace.name} "
+          f"({trace.total} requests / {len(trace)} slices, "
+          f"peak {trace.peak}/slice)")
+
+    def cb(s, n_arr, done, workers):
+        if args.quiet:
+            return
+        bl = "/".join(str(len(w.backlog)) for w in workers)
+        mig = "/".join(
+            "y" if (w.reports and w.reports[-1].moved_weights) else "."
+            for w in workers)
+        print(f"  slice {s:3d} arrivals {n_arr:3d} done {len(done):3d} "
+              f"backlog {bl:12s} migrated {mig}")
+
+    res = fleet.run(trace, verbose_cb=cb)
+    s = summarize(res)
+    print(f"completed {s.n_completed}/{s.n_submitted} "
+          f"(rejected {s.n_rejected}) over {s.n_slices} slices")
+    print(f"latency   p50 {s.p50_ms * 1e3:.2f} us | "
+          f"p95 {s.p95_ms * 1e3:.2f} us | p99 {s.p99_ms * 1e3:.2f} us "
+          f"(SLO {s.slo_ms * 1e3:.2f} us)")
+    print(f"deadline-miss-rate {s.deadline_miss_rate:.3f}")
+    print(f"energy    {s.energy_uj:.1f} uJ total, "
+          f"{s.energy_per_token_uj:.2f} uJ/token over {s.tokens} tokens")
+    print(f"placement {s.migrations} migrating slices, "
+          f"{s.weights_moved} weights moved")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(s.as_dict(), f, indent=2)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

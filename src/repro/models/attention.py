@@ -269,13 +269,18 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,
                      pos: jnp.ndarray) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode. x: (B,1,d); pos: () int32 absolute position.
+    """One-token decode. x: (B,1,d); pos: () or (B,) int32 absolute
+    position(s) - a vector gives every batch row its own position (slot
+    continuous batching, where requests start at different times).
 
     Local attention uses a ring buffer of size ``local_window``; full
     attention appends at ``pos``.
     """
     B = x.shape[0]
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = (pos[:, None] if per_row
+                 else jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32))
     q, k, v = _project_qkv(p, x, cfg, positions)
     C = cache["k"].shape[1]
     slot = (pos % C).astype(jnp.int32)
@@ -283,16 +288,23 @@ def attention_decode(p, x, cfg: ModelConfig, cache: KVCache,
     # dynamic index on the sequence-sharded cache dim makes SPMD all-gather
     # the whole cache every layer (measured 3.1 GiB/step on qwen decode);
     # the elementwise select partitions trivially (EXPERIMENTS.md SS.Perf).
-    sel = (jnp.arange(C, dtype=jnp.int32) == slot)[None, :, None, None]
+    idx = jnp.arange(C, dtype=jnp.int32)
+    if per_row:
+        sel = (idx[None, :] == slot[:, None])[:, :, None, None]
+    else:
+        sel = (idx == slot)[None, :, None, None]
     new_k = jnp.where(sel, k.astype(cache["k"].dtype), cache["k"])
     new_v = jnp.where(sel, v.astype(cache["v"].dtype), cache["v"])
     # valid = entries written so far and (for local) within the window
-    idx = jnp.arange(C)
     if cfg.attn_kind == "local":
-        valid = (idx <= slot) | (pos >= C)      # ring buffer full => all
+        if per_row:
+            valid = (idx[None, :] <= slot[:, None]) | (pos[:, None] >= C)
+        else:
+            valid = (idx <= slot) | (pos >= C)  # ring buffer full => all
     else:
-        valid = idx <= pos
-    mask = valid[None, None, None, None, :]
+        valid = idx[None, :] <= pos[:, None] if per_row else idx <= pos
+    mask = (valid[:, None, None, None, :] if per_row
+            else valid[None, None, None, None, :])
     out = _sdpa(q, new_k, new_v, mask, cfg)
     out = out @ p["wo"].astype(x.dtype)
     return out, {"k": new_k, "v": new_v}

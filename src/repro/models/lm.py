@@ -414,7 +414,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params, cfg: ModelConfig, state, tokens, pos
                 ) -> Tuple[jnp.ndarray, PyTree]:
-    """One decode step. tokens: (B,) int32; pos: () int32.
+    """One decode step. tokens: (B,) int32; pos: () int32, or (B,) int32
+    for per-row positions (slot continuous batching).
 
     Returns (logits (B, vocab), new_state).
     """

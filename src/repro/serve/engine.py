@@ -3,11 +3,25 @@
 Requests occupy fixed batch slots; finished slots are refilled from the
 queue each step (decode-time continuous batching). The KV/recurrent state
 is allocated once at ``max_len`` and reused across requests per slot.
+
+Slot refill uses a *batched prefill*: the prompts of every newly seated
+request are pushed through one jitted ``lax.scan`` per distinct prompt
+length (O(1) engine steps per refill group, instead of one full-batch
+decode step per prompt token) and the resulting per-request state is
+scattered into the engine's batched decode state at the refilled slot
+rows. Each slot carries its own decode position (``attention_decode``
+accepts per-row positions), so a refilled request's cache and RoPE phases
+are coherent regardless of how far other slots have decoded. Grouping by
+exact length means no pad tokens ever enter the state - required for
+recurrent blocks and local-attention ring buffers, where padding is not
+maskable after the fact. Batch shapes are bucketed to powers of two,
+bounding XLA compiles at O(log max_batch * distinct prompt lengths).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import time
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +38,23 @@ class Request:
     max_new_tokens: int = 16
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # step-level latency accounting (wall-clock seconds, perf_counter)
+    t_submit: Optional[float] = None
+    t_start: Optional[float] = None       # seated in a slot (prefill begins)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_done is None:
+            return None
+        return self.t_done - self.t_submit
+
+    @property
+    def queue_wait_s(self) -> Optional[float]:
+        if self.t_submit is None or self.t_start is None:
+            return None
+        return self.t_start - self.t_submit
 
 
 class DecodeEngine:
@@ -35,60 +66,148 @@ class DecodeEngine:
         self.max_len = max_len
         self.queue: List[Request] = []
         self.slots: List[Optional[Request]] = [None] * max_batch
-        self._slot_pos = np.zeros(max_batch, np.int32)
+        self.completed: List[Request] = []
         self._state = lm.init_decode_state(cfg, max_batch, max_len)
         self._toks = jnp.zeros((max_batch,), jnp.int32)
+        # per-slot absolute decode position (requests start at different
+        # times; attention_decode takes a position vector)
+        self._slot_pos = np.zeros(max_batch, np.int32)
         self._step_fn = jax.jit(
             lambda st, tk, pos: lm.decode_step(params, cfg, st, tk, pos))
-        self._pos = 0
+        self._prefill_fns: Dict[Tuple[int, int], callable] = {}
+        self.step_times_s: List[float] = []
 
     def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
+    # -- batched prefill ---------------------------------------------------
+    @staticmethod
+    def _bucket(n: int) -> int:
+        return 1 << (n - 1).bit_length() if n > 1 else 1
+
+    def _prefill_fn(self, n: int, L: int):
+        """Jitted prompt prefill for ``n`` fresh requests of exact length
+        ``L``: builds their decode state in one call (scan over tokens).
+        ``n`` arrives bucketed to a power of two, so the compile cache
+        stays O(log max_batch * distinct prompt lengths)."""
+        key = (n, L)
+        if key not in self._prefill_fns:
+            cfg, params, max_len = self.cfg, self.params, self.max_len
+
+            def fn(prompts):              # (n, L) int32
+                state = lm.init_decode_state(cfg, n, max_len)
+
+                def body(carry, tok):
+                    st, pos = carry
+                    _, st = lm.decode_step(params, cfg, st, tok, pos)
+                    return (st, pos + 1), None
+
+                (state, _), _ = jax.lax.scan(
+                    body, (state, jnp.int32(0)),
+                    jnp.swapaxes(prompts, 0, 1)[:-1])
+                return state
+
+            self._prefill_fns[key] = jax.jit(fn)
+        return self._prefill_fns[key]
+
+    def _scatter_state(self, slot_idx: List[int], new_state) -> None:
+        """Write per-request decode state rows into the batched engine state
+        at ``slot_idx`` (extra bucket-padding rows are dropped). Scanned
+        stacks carry a leading group axis, so their batch axis is 1;
+        unscanned ("tail") leaves batch at axis 0."""
+        idx = jnp.asarray(slot_idx, jnp.int32)
+        n = len(slot_idx)
+
+        def put(path, big, small):
+            axis = 1 if any(getattr(k, "key", None) == "scan"
+                            for k in path) else 0
+            sel = (slice(None),) * axis + (idx,)
+            rows = (slice(None),) * axis + (slice(0, n),)
+            return big.at[sel].set(small[rows].astype(big.dtype))
+
+        layers = jax.tree_util.tree_map_with_path(
+            put, self._state["layers"], new_state["layers"])
+        self._state = dict(self._state)
+        self._state["layers"] = layers
+
     def _fill_slots(self) -> None:
+        refills: List[Tuple[int, Request]] = []
         for i, s in enumerate(self.slots):
             if (s is None or s.done) and self.queue:
                 req = self.queue.pop(0)
+                req.t_start = time.perf_counter()
                 self.slots[i] = req
-                # feed the prompt one token at a time into this slot
-                toks = np.array(self._toks)
-                for t in req.prompt[:-1]:
-                    toks[i] = t
-                    self._toks = jnp.asarray(toks)
-                    _, self._state = self._step_fn(self._state, self._toks,
-                                                   jnp.int32(self._pos))
-                    self._pos += 1
-                toks[i] = req.prompt[-1]
-                self._toks = jnp.asarray(toks)
+                refills.append((i, req))
+        if not refills:
+            return
+        # one batched prefill per distinct prompt length: no pad tokens
+        # ever reach the state, so recurrent layers and local-attention
+        # ring buffers see exactly the prompt prefix (padding could only
+        # be masked out of full-attention KV, not of carried state)
+        by_len: Dict[int, List[Tuple[int, Request]]] = {}
+        for i, r in refills:
+            by_len.setdefault(len(r.prompt), []).append((i, r))
+        toks = np.array(self._toks)
+        for L, group in by_len.items():
+            n = self._bucket(len(group))
+            mat = np.zeros((n, L), np.int32)
+            for j, (_, r) in enumerate(group):
+                mat[j] = r.prompt
+            new_state = self._prefill_fn(n, L)(jnp.asarray(mat))
+            self._scatter_state([i for i, _ in group], new_state)
+            for i, r in group:
+                toks[i] = r.prompt[-1]
+                # prompt prefix state covers positions 0..L-2; the last
+                # prompt token is decoded next step at its position L-1
+                self._slot_pos[i] = L - 1
+        self._toks = jnp.asarray(toks)
 
     def step(self) -> Dict[int, int]:
         """Decode one token for every active slot; returns {rid: token}."""
+        t0 = time.perf_counter()
         self._fill_slots()
         if all(s is None or s.done for s in self.slots):
             return {}
         logits, self._state = self._step_fn(self._state, self._toks,
-                                            jnp.int32(self._pos))
-        self._pos += 1
+                                            jnp.asarray(self._slot_pos))
+        self._slot_pos += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         out = {}
         toks = np.asarray(self._toks).copy()
+        now = time.perf_counter()
         for i, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
             tok = int(nxt[i])
             req.out.append(tok)
+            if req.t_first_token is None:
+                req.t_first_token = now
             out[req.rid] = tok
             toks[i] = tok
             if len(req.out) >= req.max_new_tokens:
                 req.done = True
+                req.t_done = now
+                self.completed.append(req)
         self._toks = jnp.asarray(toks)
+        self.step_times_s.append(time.perf_counter() - t0)
         return out
 
+    def drain_completed(self) -> List[Request]:
+        """Return finished requests accumulated so far and clear the list
+        (fleet routers poll this between slices)."""
+        done, self.completed = self.completed, []
+        return done
+
     def run_until_done(self, max_steps: int = 1000) -> List[Request]:
-        done: List[Request] = []
+        """Run until queue and slots are exhausted; returns the requests
+        that completed during THIS call (a finished request whose slot was
+        refilled is kept, not dropped). Earlier completions stay in the
+        ``completed`` accumulator until ``drain_completed``."""
+        already = len(self.completed)
         for _ in range(max_steps):
             if not self.queue and all(s is None or s.done
                                       for s in self.slots):
                 break
             self.step()
-        return [s for s in self.slots if s is not None]
+        return list(self.completed[already:])

@@ -85,6 +85,17 @@ _SPACE_TO_TIER = {"hp_sram": "hp_bf16", "hp_mram": "hp_int8",
                   "lp_sram": "lp_bf16", "lp_mram": "lp_int8"}
 
 
+def default_t_slice_ms(arch: sp.PIMArch, model: sp.ModelSpec, *,
+                       rho: float, peak_tasks: int = 10) -> float:
+    """Slice sized as the paper sizes T: fits ``peak_tasks`` tasks at peak
+    performance, plus 1% headroom to absorb a migration. Shared by
+    ``HeteroServeEngine`` and ``repro.fleet.build_fleet``."""
+    from repro.core.energy import EnergyModel
+    em = EnergyModel(arch, model, rho=rho)
+    t_peak = em.task_cost(em.peak_placement(True)).t_task_ns
+    return t_peak * peak_tasks * 1.01 / 1e6
+
+
 def tpu_model_spec(cfg: ModelConfig, tokens_per_task: int) -> sp.ModelSpec:
     """One *task* = decoding `tokens_per_task` tokens for one request."""
     n_params = (cfg.n_layers
@@ -118,11 +129,8 @@ class HeteroServeEngine:
         # rho: weight-stationary reuse on TPU = tokens sharing one weight
         # fetch per batch step (batched decode reads W once per batch)
         if t_slice_ms is None:
-            # as the paper sizes T: fits `peak_tasks` tasks at peak perf
-            from repro.core.energy import EnergyModel
-            em = EnergyModel(self.arch, self.model_spec, rho=rho)
-            t_peak = em.task_cost(em.peak_placement(True)).t_task_ns
-            t_slice_ms = t_peak * peak_tasks * 1.01 / 1e6
+            t_slice_ms = default_t_slice_ms(self.arch, self.model_spec,
+                                            rho=rho, peak_tasks=peak_tasks)
         self.t_slice_ms = t_slice_ms
         self.sched = TimeSliceScheduler(
             self.arch, self.model_spec, t_slice_ns=t_slice_ms * 1e6,
@@ -162,6 +170,19 @@ class HeteroServeEngine:
         self._tiered_placement = dict(placement)
         return True
 
+    def apply_placement(self, placement: Dict[str, int]) -> bool:
+        """Re-tier the model weights to ``placement`` (no-op if unchanged).
+        Returns True when a migration actually happened. Fleet routers call
+        this with the placement chosen by an externally-driven scheduler."""
+        return self._retier(placement)
+
+    def decode(self, n_requests: int) -> np.ndarray:
+        """Decode one token for ``n_requests`` active requests (public fleet
+        entry point; capped at ``max_batch``)."""
+        if n_requests <= 0:
+            return np.zeros((0,), np.int32)
+        return self._decode_tokens(min(n_requests, self.max_batch))
+
     def _decode_tokens(self, n_requests: int) -> np.ndarray:
         """Decode one token per active request through the tiered model."""
         logits, self._state = lm.decode_step(
@@ -174,12 +195,19 @@ class HeteroServeEngine:
         self._toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return toks
 
-    def run_slice(self, n_requests: int) -> HeteroSliceResult:
+    def run_slice(self, n_requests: int, *,
+                  lookup_tasks: Optional[int] = None,
+                  cap_to_capacity: bool = False) -> HeteroSliceResult:
+        """One time slice. ``lookup_tasks`` consults the placement LUT on a
+        predicted load instead of the actual backlog (proactive migration);
+        ``cap_to_capacity`` executes only what fits in the slice (the report's
+        ``n_executed``), for fleet-style carryover queueing."""
         n_tasks = int(np.ceil(n_requests))
-        report = self.sched.step(n_tasks)
+        report = self.sched.step(n_tasks, lookup_tasks=lookup_tasks,
+                                 cap_to_capacity=cap_to_capacity)
         retiered = self._retier(report.placement)
-        toks = self._decode_tokens(min(n_requests, self.max_batch)) \
-            if n_requests else np.zeros((0,), np.int32)
+        toks = self._decode_tokens(min(report.n_done, self.max_batch)) \
+            if report.n_done else np.zeros((0,), np.int32)
         res = HeteroSliceResult(report, toks, retiered)
         self.history.append(res)
         return res

@@ -1,0 +1,274 @@
+"""Tests for the repro.fleet subsystem: traces, forecasters, the scheduler's
+predicted-load hook, routing/admission, and end-to-end fleet runs."""
+import numpy as np
+import pytest
+
+from repro.core import workloads
+from repro.fleet import (Fleet, build_fleet, make_forecaster, make_trace,
+                         summarize)
+from repro.fleet.forecast import AR1, EWMA, Holt, LastValue, NoForecast
+from repro.fleet.router import FleetRequest
+from repro.fleet.traces import TRACES, replay_trace
+
+
+# -- traces ------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TRACES))
+def test_traces_seeded_deterministic_and_nonnegative(name):
+    a = make_trace(name, n_slices=30, seed=3)
+    b = make_trace(name, n_slices=30, seed=3)
+    assert a.arrivals == b.arrivals
+    assert len(a) == 30
+    assert all(x >= 0 for x in a.arrivals)
+
+
+def test_trace_seeds_differ():
+    a = make_trace("poisson", n_slices=50, seed=0)
+    b = make_trace("poisson", n_slices=50, seed=1)
+    assert a.arrivals != b.arrivals
+
+
+def test_flash_crowd_spikes_at_spike_slice():
+    tr = make_trace("flash", n_slices=30, seed=0, spike_slice=10,
+                    spike=40.0, base=1.0)
+    pre = max(tr.arrivals[:10], default=0)
+    assert max(tr.arrivals[10:14]) > pre
+
+
+def test_workload_cases_available_as_traces():
+    tr = make_trace("case3_periodic_spike")
+    assert tr.arrivals == workloads.SCENARIOS["case3_periodic_spike"]
+
+
+def test_trace_truncated_respects_budget():
+    tr = replay_trace([5, 5, 5, 5])
+    cut = tr.truncated(12)
+    assert sum(cut.arrivals) == 12
+    assert cut.arrivals == [5, 5, 2]
+
+
+def test_make_trace_unknown_name_raises():
+    with pytest.raises(ValueError):
+        make_trace("nope")
+
+
+# -- forecasters -------------------------------------------------------------
+
+
+def test_noforecast_predicts_zero():
+    f = NoForecast()
+    f.observe(50)
+    assert f.predict() == 0.0
+
+
+def test_last_value_persistence():
+    f = LastValue()
+    for x in (3, 9):
+        f.observe(x)
+    assert f.predict() == 9.0
+
+
+def test_ewma_converges_to_constant_load():
+    f = EWMA(alpha=0.5)
+    for _ in range(30):
+        f.observe(7)
+    assert f.predict() == pytest.approx(7.0)
+
+
+def test_ewma_smooths_transient_dip():
+    f = EWMA(alpha=0.3)
+    for _ in range(10):
+        f.observe(10)
+    f.observe(0)                      # one-slice lull
+    assert f.predict() > 5.0          # still provisioned near the burst
+
+
+def test_ar1_tracks_autocorrelated_series():
+    rng = np.random.default_rng(0)
+    f = AR1()
+    x = 5.0
+    for _ in range(200):
+        x = 5.0 + 0.8 * (x - 5.0) + rng.normal(0, 0.5)
+        f.observe(x)
+    # prediction reverts toward the mean from the last observation
+    pred = f.predict()
+    assert 0.0 <= pred <= 15.0
+    f2 = AR1()
+    for _ in range(50):
+        f2.observe(4)
+    assert f2.predict() == pytest.approx(4.0, abs=0.5)
+
+
+def test_holt_extrapolates_ramp():
+    f = Holt(alpha=0.6, beta=0.4)
+    for x in range(1, 11):
+        f.observe(x)
+    assert f.predict() > 10.0         # trend-aware: beyond the last value
+
+
+def test_make_forecaster_unknown_raises():
+    with pytest.raises(ValueError):
+        make_forecaster("oracle")
+
+
+# -- scheduler predicted-load hook -------------------------------------------
+
+
+def test_lookup_tasks_preprovisions_fast_placement():
+    """Looking up a high predicted load on a quiet slice must choose a
+    placement at least as fast as the reactive one."""
+    f1 = build_fleet(n_engines=1, forecaster="none")
+    f2 = build_fleet(n_engines=1, forecaster="none")
+    s1 = f1.workers[0].sched
+    s2 = f2.workers[0].sched
+    r1 = s1.step(2)
+    r2 = s2.step(2, lookup_tasks=10)
+    t1 = s1.em.task_cost(r1.placement).t_task_ns
+    t2 = s2.em.task_cost(r2.placement).t_task_ns
+    assert t2 < t1
+    # and the proactive placement can actually absorb the burst next slice
+    r2b = s2.step(10)
+    assert r2b.moved_weights == 0 or r2b.t_move_ns < r2.t_move_ns
+
+
+def test_cap_to_capacity_limits_executed_tasks():
+    fleet = build_fleet(n_engines=1, forecaster="none")
+    sched = fleet.workers[0].sched
+    rep = sched.step(500, cap_to_capacity=True)
+    assert rep.n_executed is not None
+    assert rep.n_executed < 500
+    assert rep.t_exec_ns + rep.t_move_ns <= sched.t_slice_ns + 1e-6
+    assert not rep.deadline_met       # the full backlog would not have fit
+    rep2 = sched.step(1, cap_to_capacity=True)
+    assert rep2.n_executed == 1
+
+
+def test_step_without_hook_unchanged():
+    fleet = build_fleet(n_engines=1, forecaster="none")
+    sched = fleet.workers[0].sched
+    rep = sched.step(5)
+    assert rep.n_done == rep.n_tasks == 5
+    assert rep.t_exec_ns == pytest.approx(5 * rep.t_task_ns)
+
+
+# -- router / fleet ----------------------------------------------------------
+
+
+def test_least_loaded_routing_balances_backlogs():
+    fleet = build_fleet(n_engines=2, forecaster="none",
+                        policy="least_loaded")
+    tr = replay_trace([10, 10])
+    fleet.run(tr)
+    reports = fleet.workers[0].reports, fleet.workers[1].reports
+    # slice 1 executes slice 0's arrivals: 5 tasks per engine
+    assert reports[0][1].n_tasks == reports[1][1].n_tasks == 5
+
+
+def test_slo_routing_prefers_faster_engine_in_mixed_fleet():
+    fleet = build_fleet(n_engines=2, forecaster="none", mixed=True,
+                        policy="slo")
+    tr = replay_trace([8, 8, 8, 8])
+    res = fleet.run(tr)
+    big = sum(r.n_tasks for r in fleet.workers[0].reports)
+    small = sum(r.n_tasks for r in fleet.workers[1].reports)
+    assert big > small                # big engine serves the larger share
+    assert len(res.completed) == 32
+
+
+def test_admission_control_rejects_over_limit():
+    fleet = build_fleet(n_engines=1, forecaster="none", admission_limit=4)
+    tr = replay_trace([10, 0, 0, 0, 0, 0])
+    res = fleet.run(tr)
+    assert len(res.rejected) == 6     # queue cap 4 of 10 arrivals
+    assert len(res.completed) == 4
+    s = summarize(res)
+    assert s.n_rejected == 6
+    assert s.deadline_miss_rate >= 6 / 10
+
+
+def test_fleet_conserves_requests_and_stamps_latency():
+    tr = make_trace("mmpp", n_slices=20, seed=0)
+    fleet = build_fleet(n_engines=2, forecaster="ewma")
+    res = fleet.run(tr)
+    assert (len(res.completed) + len(res.rejected)
+            + len(res.unfinished) == tr.total)
+    assert not res.unfinished         # this load fully drains
+    assert all(r.latency_ns is not None and r.latency_ns > 0
+               for r in res.completed)
+    assert all(r.finish_slice > r.arrival_slice for r in res.completed)
+    s = summarize(res)
+    assert s.p50_ms <= s.p95_ms <= s.p99_ms
+    assert s.energy_uj > 0 and s.energy_per_token_uj > 0
+    assert s.tokens == sum(r.tokens for r in res.completed)
+
+
+def test_fleet_meets_slo_under_light_load():
+    tr = replay_trace([2] * 15)
+    fleet = build_fleet(n_engines=2, forecaster="none")
+    s = summarize(fleet.run(tr))
+    assert s.deadline_miss_rate == 0.0
+    assert s.p99_ms <= s.slo_ms
+
+
+def test_unfinished_backlog_counts_as_misses():
+    """Requests still queued at the drain cutoff must not vanish from the
+    accounting - they count as submitted and as SLO misses."""
+    fleet = build_fleet(n_engines=1, forecaster="none")
+    res = fleet.run(replay_trace([200]), max_drain_slices=2)
+    assert res.unfinished
+    s = summarize(res)
+    assert s.n_submitted == 200
+    assert s.n_unfinished == len(res.unfinished)
+    assert s.deadline_miss_rate >= s.n_unfinished / 200
+
+
+def test_seasonal_naive_predicts_one_period_back_bounded():
+    from repro.fleet.forecast import SeasonalNaive
+    f = SeasonalNaive(period=3)
+    for x in (1, 2, 3, 4, 5, 6, 7):
+        f.observe(x)
+    assert f.predict() == 5.0         # the value 3 slices ago
+    assert len(f._hist) == 3          # memory stays bounded at period
+
+
+def test_forecasting_cuts_miss_rate_on_bursty_trace():
+    """The benchmark's headline claim, pinned on a deterministic seed: a
+    trend-aware forecaster beats the reactive baseline on ramping load."""
+    tr = make_trace("ramp", n_slices=40, seed=1, end=12)
+    reactive = summarize(build_fleet(n_engines=1, forecaster="none").run(tr))
+    proactive = summarize(build_fleet(n_engines=1, forecaster="ewma",
+                                      forecast_margin=1.3).run(tr))
+    assert proactive.deadline_miss_rate < reactive.deadline_miss_rate
+
+
+def test_invalid_policy_and_empty_fleet_raise():
+    with pytest.raises(ValueError):
+        build_fleet(n_engines=1, policy="fastest")
+    with pytest.raises(ValueError):
+        Fleet([])
+
+
+def test_fleet_with_decode_exercises_tiered_weights():
+    """decode=True functionally applies placements: weights are re-tiered
+    and tokens decoded through the tiered model."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import lm
+    cfg = get_smoke_config("internlm2_1_8b")
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    fleet = build_fleet(cfg, n_engines=1, forecaster="ewma", params=params,
+                        decode=True)
+    tr = replay_trace([3, 2])
+    res = fleet.run(tr)
+    assert len(res.completed) == 5
+    w = fleet.workers[0]
+    assert w.hetero is not None and w.hetero._tiered is not None
+
+
+# -- fleet request bookkeeping ----------------------------------------------
+
+
+def test_fleet_request_defaults():
+    r = FleetRequest(rid=1, arrival_slice=0)
+    assert not r.rejected and r.worker is None and r.latency_ns is None

@@ -3,6 +3,7 @@ swept over shapes, block sizes and dtypes (assignment requirement)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+pytest.importorskip("hypothesis")   # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core.placement import dp_min_energy

@@ -95,6 +95,170 @@ def test_decode_engine_serves_batched_requests():
     assert sum(r.done for r in done) >= 4
 
 
+def test_run_until_done_keeps_refilled_slot_completions():
+    """A finished request whose slot is refilled from the queue must still
+    be returned (the seed dropped it)."""
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    for r in range(6):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2, 3], max_new_tokens=3))
+    done = eng.run_until_done()
+    assert sorted(r.rid for r in done) == list(range(6))
+    assert all(r.done and len(r.out) == 3 for r in done)
+
+
+def test_run_until_done_returns_only_this_runs_completions():
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    first = eng.run_until_done()
+    assert [r.rid for r in first] == [0]
+    eng.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=2))
+    second = eng.run_until_done()
+    assert [r.rid for r in second] == [1]    # batch A not double-counted
+    assert len(eng.drain_completed()) == 2   # accumulator holds both
+
+
+def test_prefill_recurrent_and_local_state_uncontaminated():
+    """Ragged refill waves must leave recurrent (rglru) state and
+    local-attention ring buffers exactly as a token-by-token reference
+    decode would - prompt grouping by exact length, no pad tokens."""
+    from repro.configs import get_smoke_config
+    cfg = get_smoke_config("recurrentgemma_2b")   # rglru + local attention
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = [9, 4, 7]
+
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=1))
+    eng.submit(Request(rid=1, prompt=[5, 6, 8, 2, 3], max_new_tokens=1))
+    eng._fill_slots()                             # ragged wave: lengths 3, 5
+    le, _ = lm.decode_step(params, cfg, eng._state, eng._toks,
+                           jnp.asarray(eng._slot_pos))
+
+    state = lm.init_decode_state(cfg, 1, 64)
+    for t, tok in enumerate(prompt[:-1]):
+        _, state = lm.decode_step(params, cfg, state,
+                                  jnp.asarray([tok], jnp.int32),
+                                  jnp.int32(t))
+    lr, _ = lm.decode_step(params, cfg, state,
+                           jnp.asarray([prompt[-1]], jnp.int32),
+                           jnp.int32(len(prompt) - 1))
+    np.testing.assert_allclose(np.asarray(le)[0], np.asarray(lr)[0],
+                               atol=1e-4)
+
+
+def test_drain_completed_clears_and_accumulates():
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=4, max_len=64)
+    for r in range(3):
+        eng.submit(Request(rid=r, prompt=[1, 2], max_new_tokens=2))
+    eng.run_until_done()
+    drained = eng.drain_completed()
+    assert len(drained) == 3
+    assert eng.drain_completed() == []
+
+
+def test_batched_prefill_handles_ragged_prompts():
+    """Slot refill feeds prompts through one jitted prefill call; ragged
+    prompt lengths in the same wave must still decode to completion."""
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=4, max_len=64)
+    prompts = [[5], [6, 7], [8, 9, 10, 11], [12, 13, 14]]
+    for r, p in enumerate(prompts):
+        eng.submit(Request(rid=r, prompt=p, max_new_tokens=4))
+    done = eng.run_until_done()
+    assert sorted(r.rid for r in done) == [0, 1, 2, 3]
+    assert all(len(r.out) == 4 for r in done)
+    # one compiled prefill signature per distinct prompt length (exact
+    # lengths - padding would corrupt recurrent/ring-buffer state)
+    assert len(eng._prefill_fns) == 4
+
+
+def test_refilled_slot_decodes_like_fresh_engine():
+    """Per-slot decode positions: a request seated by slot refill (other
+    slots already decoded past its positions) must see exactly the cache
+    rows and next-step logits it would see in a fresh engine. Compared on
+    logits with tolerance - token ids of a random-init model flip on
+    near-tie argmax under run-to-run float jitter."""
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = [9, 4, 7]
+
+    fresh = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    fresh.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=4))
+    fresh._fill_slots()
+
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    for r in range(2):
+        eng.submit(Request(rid=r, prompt=[1 + r, 2], max_new_tokens=5))
+    eng.submit(Request(rid=2, prompt=list(prompt), max_new_tokens=4))
+    while not any(s is not None and s.done for s in eng.slots):
+        eng.step()
+    eng._fill_slots()          # seats rid=2 into a used slot
+    slot = next(i for i, s in enumerate(eng.slots)
+                if s is not None and s.rid == 2)
+    assert eng._slot_pos[slot] == fresh._slot_pos[0]
+    # the refilled slot's KV rows match a fresh engine's (junk from the
+    # previous occupant is fully overwritten)
+    for layer in ("tail_0", "tail_1"):
+        np.testing.assert_allclose(
+            np.asarray(eng._state["layers"][layer]["k"][slot]),
+            np.asarray(fresh._state["layers"][layer]["k"][0]),
+            atol=1e-5)
+    # and the next decode step computes the same distribution
+    lf, _ = lm.decode_step(params, cfg, fresh._state, fresh._toks,
+                           jnp.asarray(fresh._slot_pos))
+    le, _ = lm.decode_step(params, cfg, eng._state, eng._toks,
+                           jnp.asarray(eng._slot_pos))
+    np.testing.assert_allclose(np.asarray(le)[slot], np.asarray(lf)[0],
+                               atol=1e-4)
+
+
+def test_prefill_padding_is_inert():
+    """Bucket padding must not change what a request conditions on: the
+    engine's first-step logits for a non-power-of-two prompt equal an
+    exact token-by-token reference decode."""
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    prompt = [9, 4, 7]              # L buckets to 4
+
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=1))
+    eng._fill_slots()
+    le, _ = lm.decode_step(params, cfg, eng._state, eng._toks,
+                           jnp.asarray(eng._slot_pos))
+
+    # reference: feed the prompt one token at a time, no padding
+    state = lm.init_decode_state(cfg, 1, 64)
+    for t, tok in enumerate(prompt[:-1]):
+        _, state = lm.decode_step(params, cfg, state,
+                                  jnp.asarray([tok], jnp.int32),
+                                  jnp.int32(t))
+    lr, _ = lm.decode_step(params, cfg, state,
+                           jnp.asarray([prompt[-1]], jnp.int32),
+                           jnp.int32(len(prompt) - 1))
+    np.testing.assert_allclose(np.asarray(le)[0], np.asarray(lr)[0],
+                               atol=1e-4)
+
+
+def test_request_latency_accounting():
+    cfg = _tiny_cfg()
+    params = lm.init_lm(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, max_batch=2, max_len=64)
+    for r in range(3):
+        eng.submit(Request(rid=r, prompt=[1, 2, 3], max_new_tokens=2))
+    done = eng.run_until_done()
+    for r in done:
+        assert r.t_submit is not None and r.t_done is not None
+        assert r.t_submit <= r.t_start <= r.t_first_token <= r.t_done
+        assert r.latency_s >= 0 and r.queue_wait_s >= 0
+    assert eng.step_times_s and all(t > 0 for t in eng.step_times_s)
+
+
 def test_tiered_matmul_matches_dense():
     rng = np.random.default_rng(0)
     w = jnp.asarray(rng.normal(0, 0.5, (32, 64)), jnp.float32)

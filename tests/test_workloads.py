@@ -1,0 +1,120 @@
+"""Tests for the Fig. 4 workload generators and the scheduler's straggler
+slowdown-factor rescaling path."""
+import numpy as np
+import pytest
+
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.energy import EnergyModel
+from repro.core.scheduler import TimeSliceScheduler
+from repro.core.system import default_t_slice_ns
+
+RHO = 4.0
+
+
+# -- the six case generators -------------------------------------------------
+
+
+def test_all_cases_have_default_length_and_range():
+    for name, tasks in workloads.SCENARIOS.items():
+        assert len(tasks) == workloads.N_SLICES, name
+        assert all(isinstance(t, int) for t in tasks), name
+        assert all(1 <= t <= workloads.PEAK_TASKS for t in tasks), name
+
+
+def test_case1_low_constant():
+    assert workloads.case1_low_constant() == \
+        [workloads.LOW_TASKS] * workloads.N_SLICES
+    assert len(workloads.case1_low_constant(7)) == 7
+
+
+def test_case2_high_constant():
+    assert workloads.case2_high_constant() == \
+        [workloads.PEAK_TASKS] * workloads.N_SLICES
+
+
+def test_case3_periodic_spike_structure():
+    tasks = workloads.case3_periodic_spike()
+    for i, t in enumerate(tasks):
+        want = (workloads.PEAK_TASKS if i % 10 < 2 else workloads.LOW_TASKS)
+        assert t == want, i
+    # exactly width peaks per full period
+    assert sum(t == workloads.PEAK_TASKS for t in tasks[:10]) == 2
+
+
+def test_case4_periodic_spike_frequent_structure():
+    tasks = workloads.case4_periodic_spike_frequent()
+    for i, t in enumerate(tasks):
+        want = (workloads.PEAK_TASKS if i % 4 < 1 else workloads.LOW_TASKS)
+        assert t == want, i
+
+
+def test_case5_pulsing_alternates_half_periods():
+    tasks = workloads.case5_pulsing()
+    for i, t in enumerate(tasks):
+        want = (workloads.PEAK_TASKS if (i // 5) % 2 == 0
+                else workloads.LOW_TASKS)
+        assert t == want, i
+    # peak and low both actually occur
+    assert workloads.PEAK_TASKS in tasks and workloads.LOW_TASKS in tasks
+
+
+def test_case6_random_seeded_and_bounded():
+    a = workloads.case6_random(seed=0)
+    b = workloads.case6_random(seed=0)
+    c = workloads.case6_random(seed=1)
+    assert a == b
+    assert a != c
+    assert min(a) >= 1 and max(a) <= workloads.PEAK_TASKS
+
+
+# -- straggler slowdown-factor rescaling -------------------------------------
+
+
+def _sched():
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, RHO)
+    return TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
+                              lut_points=24)
+
+
+def test_observe_slowdown_rejects_speedup():
+    sched = _sched()
+    with pytest.raises(ValueError):
+        sched.observe_slowdown("lp", 0.5)
+
+
+def test_slowdown_rescales_effective_weight_times():
+    sched = _sched()
+    lp_sram = sched.arch.cluster("lp").space("sram")
+    hp_sram = sched.arch.cluster("hp").space("sram")
+    t_lp = sched.em.weight_time_ns(lp_sram)
+    t_hp = sched.em.weight_time_ns(hp_sram)
+    sched.observe_slowdown("lp", 3.0)
+    assert sched.em.weight_time_ns(lp_sram) == pytest.approx(3.0 * t_lp)
+    # the other cluster's timing is untouched
+    assert sched.em.weight_time_ns(hp_sram) == pytest.approx(t_hp)
+
+
+def test_slowdown_rebuilds_and_caches_lut():
+    sched = _sched()
+    lut0 = sched.lut
+    sched.observe_slowdown("lp", 2.0)
+    lut2 = sched.lut
+    assert lut2 is not lut0            # degraded timing => new LUT
+    assert sched.lut is lut2           # cached per slowdown signature
+    sched.observe_slowdown("lp", 1.0)
+    assert sched.lut is lut0           # recovery reuses the original
+
+
+def test_time_scale_in_energy_model_changes_task_cost():
+    m = sp.EFFICIENTNET_B0
+    em = EnergyModel(sp.hh_pim(), m, rho=RHO)
+    em_slow = EnergyModel(sp.hh_pim(), m, rho=RHO,
+                          time_scale={"lp": 2.0})
+    pl = {"lp_sram": m.n_params}
+    assert em_slow.task_cost(pl).t_task_ns == \
+        pytest.approx(2.0 * em.task_cost(pl).t_task_ns)
+    # energy per op is unaffected by a timing slowdown
+    assert em_slow.task_cost(pl).e_dyn_task_pj == \
+        pytest.approx(em.task_cost(pl).e_dyn_task_pj)
