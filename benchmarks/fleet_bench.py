@@ -24,7 +24,8 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.fleet import build_fleet, summarize
+from repro import api
+from repro.fleet import summarize
 from repro.fleet.traces import BURSTY, make_trace
 
 SEEDS = (0, 1, 2)
@@ -59,8 +60,8 @@ def _cell(trace_name: str, n_engines: int, forecaster: str) -> Dict:
         for k in _SCALED[trace_name]:
             kw[k] = kw[k] * n_engines
         tr = make_trace(trace_name, n_slices=N_SLICES, seed=seed, **kw)
-        fleet = build_fleet(
-            n_engines=n_engines, forecaster=forecaster,
+        fleet = api.fleet(
+            "tpu-pool", n_engines=n_engines, forecaster=forecaster,
             tokens_per_task=TOKENS_PER_TASK,
             forecast_margin=1.0 if forecaster == "none" else MARGIN)
         s = summarize(fleet.run(tr))

@@ -2,7 +2,8 @@
 
 One function per table/figure; each returns (rows, derived) where rows are
 CSV-ready dicts and derived holds the headline numbers compared against the
-paper's claims. ``benchmarks.run`` aggregates.
+paper's claims. ``benchmarks.run`` aggregates. All stacks are constructed
+through the ``repro.api`` facade (substrate/solver registries).
 """
 from __future__ import annotations
 
@@ -11,14 +12,14 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import api
 from repro.core import spaces as sp
 from repro.core import workloads
-from repro.core.energy import EnergyModel
-from repro.core.placement import build_lut
 from repro.core.system import (default_t_slice_ns, energy_savings_table,
-                               run_baseline, run_hh_pim)
+                               run_hh_pim)
 
 RHO = 4.0   # benchmark default weight-reuse factor (DESIGN.md SS.2)
+HHPIM = api.substrate("edge-hhpim")
 
 PAPER_PEAK_MS = {          # SS.IV.B: SRAM+MRAM peak / MRAM-only peak per inf.
     "efficientnet_b0": (3.106, 4.450),
@@ -43,7 +44,7 @@ def table3_latency() -> Tuple[List[Dict], Dict]:
     rows, derived = [], {}
     for rho in (1.0, RHO):
         for m in sp.TINYML_MODELS.values():
-            em = EnergyModel(sp.hh_pim(), m, rho=rho)
+            em = HHPIM.energy_model(m, rho=rho)
             t_s = em.task_cost(em.peak_placement(True)).t_task_ns / 1e6
             t_m = em.task_cost(em.peak_placement(False)).t_task_ns / 1e6
             ps, pm = PAPER_PEAK_MS[m.name]
@@ -65,9 +66,9 @@ def table3_latency() -> Tuple[List[Dict], Dict]:
 def table5_power() -> Tuple[List[Dict], Dict]:
     """Table V: per-op dynamic energy + per-slice static by space."""
     m = sp.EFFICIENTNET_B0
-    em = EnergyModel(sp.hh_pim(), m, rho=RHO)
+    em = HHPIM.energy_model(m, rho=RHO)
     rows = []
-    for s in sp.hh_pim().spaces:
+    for s in HHPIM.arch.spaces:
         rows.append({
             "space": s.name,
             "op_ns": round(s.op_ns(RHO), 3),
@@ -88,8 +89,8 @@ def fig6_placement_sweep() -> Tuple[List[Dict], Dict]:
     """Fig. 6: memory utilization + E_task across t_constraint."""
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    lut = build_lut(sp.hh_pim(), m, t_slice_ns=T, n_points=64, rho=RHO)
-    em = EnergyModel(sp.hh_pim(), m, rho=RHO)
+    lut = api.lut("edge-hhpim", m, t_slice_ns=T, n_points=64, rho=RHO)
+    em = HHPIM.energy_model(m, rho=RHO)
     peak = em.peak_placement(True)
     rows = []
     seq = []
@@ -185,6 +186,37 @@ def fig4_scheduler_latency() -> Tuple[List[Dict], Dict]:
     return rows, {"total_deadline_misses": misses}
 
 
+def solver_agreement() -> Tuple[List[Dict], Dict]:
+    """Registry cross-check: the verbatim Algorithm 1+2 DP and the
+    closed-form solver, selected by name through the facade, must agree on
+    the six workload cases (same deadline behaviour, close energy)."""
+    m = sp.EFFICIENTNET_B0
+    rows = []
+    devs = []
+    for scen in workloads.SCENARIOS:
+        res = {}
+        for solver in ("closed-form", "dp"):
+            t0 = time.perf_counter()
+            res[solver] = run_hh_pim(m, scen, rho=RHO, lut_points=24,
+                                     solver=solver)
+            res[solver + "_s"] = time.perf_counter() - t0
+        cf, dp = res["closed-form"], res["dp"]
+        dev = 100 * (dp.energy_uj / cf.energy_uj - 1)
+        devs.append(abs(dev))
+        rows.append({"scenario": scen,
+                     "closed_form_uj": round(cf.energy_uj, 1),
+                     "dp_uj": round(dp.energy_uj, 1),
+                     "energy_dev_pct": round(dev, 3),
+                     "cf_misses": cf.deadline_miss,
+                     "dp_misses": dp.deadline_miss,
+                     "cf_build_s": round(res["closed-form_s"], 3),
+                     "dp_build_s": round(res["dp_s"], 3)})
+    derived = {"max_energy_dev_pct": round(float(np.max(devs)), 3),
+               "misses_agree": all(r["cf_misses"] == r["dp_misses"]
+                                   for r in rows)}
+    return rows, derived
+
+
 ALL = {
     "table3_latency": table3_latency,
     "table5_power": table5_power,
@@ -192,4 +224,5 @@ ALL = {
     "fig5_energy_savings": fig5_energy_savings,
     "table6_cases": table6_cases,
     "fig4_scheduler_latency": fig4_scheduler_latency,
+    "solver_agreement": solver_agreement,
 }

@@ -3,10 +3,13 @@
 Prints ``name,us_per_call,derived`` CSV per the harness contract, where
 ``us_per_call`` is the wall time of producing the table and ``derived``
 holds the headline numbers compared to the paper's claims. Row-level detail
-is written to benchmarks/results/<name>.csv.
+is written to benchmarks/results/<name>.csv. The tables construct their
+stacks through ``repro.api`` (see benchmarks/paper_tables.py); ``--only``
+filters by table-name substring.
 """
 from __future__ import annotations
 
+import argparse
 import csv
 import json
 import time
@@ -16,10 +19,16 @@ from benchmarks import paper_tables
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run only tables whose name contains this")
+    args = ap.parse_args()
     out_dir = Path(__file__).parent / "results"
     out_dir.mkdir(exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in paper_tables.ALL.items():
+        if args.only and args.only not in name:
+            continue
         t0 = time.perf_counter()
         rows, derived = fn()
         us = (time.perf_counter() - t0) * 1e6

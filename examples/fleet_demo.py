@@ -1,14 +1,18 @@
 """Fleet serving demo: reactive vs forecasting placement on bursty traffic.
 
-Builds a two-engine fleet (analytic path - no model weights needed), runs
-the same diurnal trace with the paper's reactive LUT lookup and with a
-trend-aware forecaster feeding the scheduler's ``lookup_tasks`` hook, then
-shows a heterogeneous (mixed big/small) fleet where SLO-aware routing
-beats round-robin.
+Everything is constructed through the ``repro.api`` facade: a substrate
+registry name ("tpu-pool" / "tpu-pool-mixed") plus keyword overrides
+replaces the old hand-wired ``build_fleet`` plumbing. The demo builds a
+two-engine fleet (analytic path - no model weights needed), runs the same
+diurnal trace with the paper's reactive LUT lookup and with a trend-aware
+forecaster feeding the scheduler's ``lookup_tasks`` hook, then shows a
+heterogeneous (mixed big/small) fleet where SLO-aware routing beats
+round-robin.
 
 Run: PYTHONPATH=src python examples/fleet_demo.py
 """
-from repro.fleet import build_fleet, make_trace, summarize
+from repro import api
+from repro.fleet import make_trace, summarize
 
 
 def show(tag, s):
@@ -25,19 +29,19 @@ def main():
 
     print("reactive vs proactive (2 engines, slo routing):")
     for fc in ("none", "holt"):
-        fleet = build_fleet(n_engines=2, forecaster=fc,
-                            forecast_margin=1.0 if fc == "none" else 1.3)
+        fleet = api.fleet("tpu-pool", n_engines=2, forecaster=fc,
+                          forecast_margin=1.0 if fc == "none" else 1.3)
         show(f"forecaster={fc}", summarize(fleet.run(trace)))
 
     print("routing policy on a mixed (big+small) fleet:")
     for policy in ("round_robin", "slo"):
-        fleet = build_fleet(n_engines=2, forecaster="holt", mixed=True,
-                            policy=policy, forecast_margin=1.3)
+        fleet = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="holt",
+                          policy=policy, forecast_margin=1.3)
         show(f"policy={policy}", summarize(fleet.run(trace)))
 
     print("admission control (queue cap 12 tasks/engine):")
-    fleet = build_fleet(n_engines=2, forecaster="holt", forecast_margin=1.3,
-                        admission_limit=12)
+    fleet = api.fleet("tpu-pool", n_engines=2, forecaster="holt",
+                      forecast_margin=1.3, admission_limit=12)
     show("admission_limit=12", summarize(fleet.run(trace)))
 
 

@@ -6,14 +6,14 @@ rho moves the LP-MRAM-only crossover (DESIGN.md SS.2 modeling note).
 
 Run:  PYTHONPATH=src python examples/placement_sweep.py
 """
+from repro import api
 from repro.core import spaces as sp
-from repro.core.placement import build_lut
 from repro.core.system import default_t_slice_ns
 
 
 def sweep(model: sp.ModelSpec, rho: float) -> None:
     T = default_t_slice_ns(model, rho)
-    lut = build_lut(sp.hh_pim(), model, t_slice_ns=T, n_points=32, rho=rho)
+    lut = api.lut("edge-hhpim", model, t_slice_ns=T, n_points=32, rho=rho)
     print(f"-- {model.name} (rho={rho}, T={T/1e6:.2f} ms)")
     seen = None
     for e in lut.entries:

@@ -7,9 +7,8 @@ comparison PIMs (Fig. 5).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+from repro import api
 from repro.core import spaces as sp
-from repro.core.energy import EnergyModel
-from repro.core.placement import build_lut
 from repro.core.system import (default_t_slice_ns, run_baseline, run_hh_pim)
 
 RHO = 4.0
@@ -17,8 +16,9 @@ RHO = 4.0
 
 def main() -> None:
     model = sp.EFFICIENTNET_B0
-    arch = sp.hh_pim()
-    em = EnergyModel(arch, model, rho=RHO)
+    sub = api.substrate("edge-hhpim")
+    arch = sub.arch
+    em = sub.energy_model(model, rho=RHO)
     T = default_t_slice_ns(model, RHO)
 
     print(f"== HH-PIM ({arch.name}) / {model.name} ==")
@@ -34,7 +34,7 @@ def main() -> None:
           "(paper: SRAM+MRAM wins)\n")
 
     print("placement LUT (allocation_state) - Fig. 6 migration:")
-    lut = build_lut(arch, model, t_slice_ns=T, n_points=24, rho=RHO)
+    lut = api.lut(sub, model, t_slice_ns=T, n_points=24, rho=RHO)
     seen = None
     for e in lut.entries:
         if not e.feasible:

@@ -15,11 +15,11 @@ import argparse
 
 import jax
 
+from repro import api
 from repro.configs import get_config
 from repro.core import workloads
 from repro.models import lm
 from repro.models.common import reduced
-from repro.serve.hetero import HeteroServeEngine
 
 
 def main() -> None:
@@ -34,15 +34,15 @@ def main() -> None:
     print(f"model: {cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} "
           f"(reduced {get_config('hhpim_edge').name} for CPU demo)")
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    eng = HeteroServeEngine(cfg, params, n_hp_chips=4, n_lp_chips=4,
-                            max_batch=8)
+    eng = api.engine("tpu-pool", cfg, params, max_batch=8,
+                     n_hp_chips=4, n_lp_chips=4)
     print(f"time slice (10 tasks at peak): {eng.t_slice_ms:.3f} ms")
 
     loads = workloads.SCENARIOS[args.scenario][: args.slices]
     print(f"scenario {args.scenario}: loads {loads}\n")
-    print(f"{'slice':>5} {'load':>4} {'placement (hp_bf16/hp_int8/'
-          'lp_bf16/lp_int8)':>46} {'E_slice uJ':>11} {'retier':>6} "
-          f"{'deadline':>8}")
+    header = "placement (hp_bf16/hp_int8/lp_bf16/lp_int8)"
+    print(f"{'slice':>5} {'load':>4} {header:>46} {'E_slice uJ':>11} "
+          f"{'retier':>6} {'deadline':>8}")
     for i, n in enumerate(loads):
         r = eng.run_slice(min(n, eng.max_batch))
         pl = r.report.placement

@@ -1,0 +1,178 @@
+"""``repro.api`` - the one facade for constructing the HH-PIM stack.
+
+Every entry point (launch CLIs, benchmarks, examples, fleets) builds
+schedulers, serve engines and fleets through this module instead of
+hand-wiring ``(arch, model, em, lut, rho, t_slice)`` tuples. Substrates
+and solvers are string-keyed registries (DESIGN.md SS.5):
+
+    from repro import api
+
+    sched = api.scheduler("edge-hhpim", "efficientnet_b0", rho=4.0)
+    sched = api.scheduler("edge-hybrid", model)        # fixed Table I policy
+    sched = api.scheduler("tpu-pool", cfg, solver="dp")
+    lut   = api.lut("edge-hhpim", model, t_slice_ns=T)
+    eng   = api.engine("tpu-pool", cfg, params, max_batch=4)
+    fl    = api.fleet("tpu-pool-mixed", n_engines=4, forecaster="holt")
+
+Adding a backend = one ``register_substrate`` entry; adding a placement
+strategy = one ``register_solver`` entry. Legacy constructors
+(``TimeSliceScheduler(arch, model, ...)``, ``make_baseline_scheduler``,
+``build_fleet``) remain as one-release deprecation shims over this
+module.
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+from repro.core.scheduler import FixedPlacementScheduler, TimeSliceScheduler
+from repro.core.solvers import (SOLVERS, FixedPolicySolver,  # noqa: F401
+                                PlacementSolver, make_solver,
+                                register_solver)
+from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
+                                  available_substrates, make_substrate,
+                                  register_substrate)
+
+__all__ = [
+    "substrate", "solver", "lut", "scheduler", "engine", "fleet",
+    "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
+    "register_substrate", "register_solver", "available_substrates",
+]
+
+
+def substrate(name: Union[str, Substrate], **over) -> Substrate:
+    """Resolve a substrate by registry name (instances pass through;
+    keyword overrides go to the factory / ``dataclasses.replace``)."""
+    return make_substrate(name, **over)
+
+
+def solver(name: Union[str, PlacementSolver]) -> PlacementSolver:
+    """Resolve a placement solver by registry name."""
+    return make_solver(name)
+
+
+def lut(sub: Union[str, Substrate], workload=None, *, solver=None,
+        t_slice_ns: Optional[float] = None, n_points: Optional[int] = None,
+        rho: Optional[float] = None, **over):
+    """Build a :class:`~repro.core.placement.PlacementLUT` for a substrate
+    workload through its (or the named) solver."""
+    return substrate(sub, **over).build_lut(
+        workload, solver=solver, t_slice_ns=t_slice_ns, n_points=n_points,
+        rho=rho)
+
+
+def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
+              t_slice_ns: Optional[float] = None,
+              rho: Optional[float] = None, lut=None,
+              lut_points: Optional[int] = None, initial_placement=None,
+              **over):
+    """Construct the per-slice runtime for a substrate workload.
+
+    Dynamic solvers (``closed-form``/``dp``) yield a
+    :class:`~repro.core.scheduler.TimeSliceScheduler`; the degenerate
+    ``fixed-*`` solvers yield a
+    :class:`~repro.core.scheduler.FixedPlacementScheduler` (the Table I
+    comparison-group semantics: no migration, no movement accounting).
+    """
+    s = substrate(sub, **over)
+    model = s.model_spec(workload)
+    rho = s.rho if rho is None else rho
+    if t_slice_ns is None:
+        t_slice_ns = s.default_t_slice_ns(model, rho=rho)
+    sol = make_solver(solver or s.solver)
+    if sol.fixed:
+        em = s.energy_model(model, rho=rho)
+        return FixedPlacementScheduler(
+            s.arch, model, t_slice_ns=t_slice_ns,
+            placement=sol.initial_placement(em), rho=rho)
+    return TimeSliceScheduler.from_substrate(
+        s, model, t_slice_ns=t_slice_ns, rho=rho, solver=sol, lut=lut,
+        initial_placement=initial_placement, lut_points=lut_points)
+
+
+def engine(sub: Union[str, Substrate] = "tpu-pool", cfg=None, params=None,
+           *, t_slice_ms: Optional[float] = None, max_batch: int = 16,
+           seed: int = 0, **over):
+    """Construct a functional serve engine (weights actually re-tiered per
+    placement) on a TPU-pool substrate."""
+    from repro.serve.hetero import HeteroServeEngine
+    s = substrate(sub, **over)
+    if not s.supports_decode:
+        raise ValueError(
+            f"substrate {s.name!r} has no functional serve engine "
+            f"(accounting-only); use a tpu-pool substrate")
+    return HeteroServeEngine(cfg, params, substrate=s,
+                             t_slice_ms=t_slice_ms, max_batch=max_batch,
+                             seed=seed)
+
+
+def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
+          n_engines: int = 2, forecaster: str = "ewma",
+          policy: str = "slo", tokens_per_task: Optional[int] = None,
+          rho: Optional[float] = None, t_slice_ms: Optional[float] = None,
+          lut_points: Optional[int] = None,
+          admission_limit: Optional[int] = None, slo_slices: float = 2.0,
+          forecast_margin: float = 1.0, params=None, decode: bool = False,
+          max_batch: int = 16, forecaster_kw: Optional[dict] = None,
+          workload=None, **over):
+    """Construct a fleet of ``n_engines`` serve engines on one substrate.
+
+    Engine shapes come from ``substrate.engine_variant(i)`` (the
+    ``tpu-pool-mixed`` substrate gives odd engines half the chips);
+    engines with the same shape share one placement LUT. ``decode=True``
+    (TPU substrates, requires ``params``) attaches a real
+    ``HeteroServeEngine`` per worker so every placement change re-tiers
+    actual weights and decodes tokens through them.
+    """
+    from repro.fleet.forecast import make_forecaster
+    from repro.fleet.router import EngineWorker, Fleet
+
+    s = substrate(sub, **over)
+    if tokens_per_task is None:
+        # registry names get the fleet default; a pre-configured Substrate
+        # instance keeps whatever it was built with
+        tokens_per_task = (s.tokens_per_task
+                           if not isinstance(sub, str)
+                           and hasattr(s, "tokens_per_task") else 2)
+    if hasattr(s, "tokens_per_task") and s.tokens_per_task != tokens_per_task:
+        s = s.replace(tokens_per_task=tokens_per_task)
+    rho = s.rho if rho is None else rho
+    if rho != s.rho:
+        s = s.replace(rho=rho)
+    model = s.model_spec(workload if workload is not None else cfg)
+
+    variants = [s.engine_variant(i) for i in range(n_engines)]
+    shapes = {}
+    for v in variants:
+        shapes.setdefault(v.variant_key(), v)
+
+    if t_slice_ms is None:
+        # fleet-wide slice = the fastest engine shape's default sizing
+        t_slice_ms = min(v.default_t_slice_ns(model, rho=rho)
+                         for v in shapes.values()) / 1e6
+    t_slice_ns = t_slice_ms * 1e6
+
+    # one LUT per distinct engine shape, shared by all its instances
+    luts = {key: v.build_lut(model, t_slice_ns=t_slice_ns,
+                             n_points=lut_points, rho=rho)
+            for key, v in shapes.items()}
+
+    workers = []
+    for i, v in enumerate(variants):
+        hetero = None
+        if decode:
+            if params is None:
+                raise ValueError("decode=True requires model params")
+            eng = engine(v, cfg, params, t_slice_ms=t_slice_ns / 1e6,
+                         max_batch=max_batch)
+            sched = eng.sched
+            sched._lut_cache[sched._slowdown_key()] = luts[v.variant_key()]
+            hetero = eng
+        else:
+            sched = TimeSliceScheduler.from_substrate(
+                v, model, t_slice_ns=t_slice_ns, rho=rho,
+                lut=luts[v.variant_key()], lut_points=lut_points)
+        workers.append(EngineWorker(
+            i, sched, make_forecaster(forecaster, **(forecaster_kw or {})),
+            hetero=hetero, substrate=v, forecast_margin=forecast_margin))
+    return Fleet(workers, policy=policy, admission_limit=admission_limit,
+                 slo_slices=slo_slices, tokens_per_request=tokens_per_task)

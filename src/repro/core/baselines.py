@@ -1,6 +1,13 @@
-"""Comparison-group processors (Table I) and their fixed placement policies."""
+"""Comparison-group processors (Table I) and their fixed placement policies.
+
+The policies are registered as degenerate solvers (``fixed-baseline`` /
+``fixed-hetero`` / ``fixed-hybrid``) bound to the ``edge-*`` substrates;
+construct their runtimes via ``repro.api.scheduler("edge-<kind>", ...)``.
+``make_baseline_scheduler`` remains as a one-release deprecation shim.
+"""
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
 from repro.core import spaces as sp
@@ -32,13 +39,13 @@ def hybrid_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
 def make_baseline_scheduler(kind: str, model: sp.ModelSpec, *,
                             t_slice_ns: float, rho: float = 1.0
                             ) -> FixedPlacementScheduler:
-    if kind == "baseline":
-        arch, pl = baseline_policy(model)
-    elif kind == "hetero":
-        arch, pl = hetero_policy(model, rho)
-    elif kind == "hybrid":
-        arch, pl = hybrid_policy(model)
-    else:
+    """Deprecated shim: use ``repro.api.scheduler("edge-<kind>", ...)``."""
+    if kind not in ("baseline", "hetero", "hybrid"):
         raise ValueError(kind)
-    return FixedPlacementScheduler(arch, model, t_slice_ns=t_slice_ns,
-                                   placement=pl, rho=rho)
+    warnings.warn(
+        f"make_baseline_scheduler is deprecated; use "
+        f"repro.api.scheduler('edge-{kind}', model, ...) instead "
+        f"(DESIGN.md SS.5)", DeprecationWarning, stacklevel=2)
+    from repro import api
+    return api.scheduler(f"edge-{kind}", model, t_slice_ns=t_slice_ns,
+                         rho=rho)

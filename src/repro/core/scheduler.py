@@ -13,11 +13,18 @@ receives a smaller shard next slice.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List, Optional
 
 from repro.core import spaces as sp
 from repro.core.energy import EnergyModel, Placement
-from repro.core.placement import PlacementLUT, build_lut
+from repro.core.placement import PlacementLUT
+from repro.core.solvers import PlacementSolver, make_solver
+
+_DEPRECATION_MSG = (
+    "direct TimeSliceScheduler(arch, model, ...) construction is "
+    "deprecated; build through repro.api.scheduler(substrate_name, ...) "
+    "instead (see DESIGN.md SS.5)")
 
 
 @dataclasses.dataclass
@@ -56,19 +63,63 @@ class TimeSliceScheduler:
                  lut: Optional[PlacementLUT] = None,
                  initial_placement: Optional[Placement] = None,
                  lut_points: int = 64):
+        # Legacy keyword-threaded constructor, kept one release for
+        # downstream scripts; repro.api.scheduler is the canonical path.
+        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
+        self._setup(arch, model, t_slice_ns=t_slice_ns, rho=rho, lut=lut,
+                    initial_placement=initial_placement,
+                    lut_points=lut_points)
+
+    @classmethod
+    def from_substrate(cls, substrate, workload=None, *,
+                       t_slice_ns: Optional[float] = None,
+                       rho: Optional[float] = None,
+                       solver=None,
+                       lut: Optional[PlacementLUT] = None,
+                       initial_placement: Optional[Placement] = None,
+                       lut_points: Optional[int] = None
+                       ) -> "TimeSliceScheduler":
+        """Canonical constructor: resolve everything from a
+        :class:`~repro.core.substrate.Substrate` (duck-typed), letting
+        callers override slice length, reuse factor, solver and LUT."""
+        model = substrate.model_spec(workload)
+        rho = substrate.rho if rho is None else rho
+        if t_slice_ns is None:
+            t_slice_ns = substrate.default_t_slice_ns(model, rho=rho)
+        sol = make_solver(solver or substrate.solver)
+        self = cls.__new__(cls)
+        self._setup(substrate.arch, model, t_slice_ns=t_slice_ns, rho=rho,
+                    lut=lut, initial_placement=initial_placement,
+                    lut_points=(substrate.lut_points if lut_points is None
+                                else lut_points),
+                    solver=sol)
+        return self
+
+    def _setup(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
+               t_slice_ns: float, rho: float,
+               lut: Optional[PlacementLUT],
+               initial_placement: Optional[Placement],
+               lut_points: int,
+               solver: Optional[PlacementSolver] = None) -> None:
         self.arch = arch
         self.model = model
         self.t_slice_ns = float(t_slice_ns)
         self.rho = rho
         self.lut_points = lut_points
+        self.solver = solver if solver is not None \
+            else make_solver("closed-form")
         self.em = EnergyModel(arch, model, rho=rho)
+        # slowdown must exist before the cache prime: the lut property
+        # looks the cache up under the populated slowdown signature.
+        self.slowdown: Dict[str, float] = {c.name: 1.0
+                                           for c in self.arch.clusters}
         self._lut_cache: Dict[tuple, PlacementLUT] = {}
         if lut is not None:
             self._lut_cache[self._slowdown_key()] = lut
+        if initial_placement is None:
+            initial_placement = self.solver.initial_placement(self.em)
         self.placement: Placement = dict(
             initial_placement or self.em.peak_placement(sram_only=True))
-        self.slowdown: Dict[str, float] = {c.name: 1.0
-                                           for c in self.arch.clusters}
         self._idx = 0
 
     # -- straggler feedback ------------------------------------------------
@@ -93,9 +144,9 @@ class TimeSliceScheduler:
     def lut(self) -> PlacementLUT:
         key = self._slowdown_key()
         if key not in self._lut_cache:
-            self._lut_cache[key] = build_lut(
-                self.arch, self.model, t_slice_ns=self.t_slice_ns,
-                rho=self.rho, n_points=self.lut_points, em=self.em)
+            self._lut_cache[key] = self.solver.build_lut(
+                self.em, t_slice_ns=self.t_slice_ns,
+                n_points=self.lut_points)
         return self._lut_cache[key]
 
     # -- one slice ----------------------------------------------------------

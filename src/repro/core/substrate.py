@@ -1,0 +1,264 @@
+"""``repro.core.substrate`` - one parametric interface over placement
+substrates.
+
+DESIGN.md SS.3 proves Eq. (1) of the paper is substrate-agnostic:
+Algorithms 1/2 only need per-space ``(t_i, e_i)``. A :class:`Substrate`
+bundles everything an entry point needs to instantiate the stack for one
+hardware platform - the :class:`~repro.core.spaces.PIMArch`, a
+``model_spec(workload)`` mapping, the energy model, the LUT builder
+(through the pluggable :mod:`repro.core.solvers`), and
+``apply_placement`` (functional weight migration, where the platform has
+one) - behind a string-keyed registry:
+
+  ================== ==================================================
+  ``edge-hhpim``     HH-PIM (Table I row 4), dynamic closed-form solver
+  ``edge-hetero``    Heterogeneous-PIM, fixed balanced-SRAM policy
+  ``edge-hybrid``    Hybrid-PIM, fixed MRAM-resident policy
+  ``edge-baseline``  Baseline-PIM, fixed all-SRAM policy
+  ``tpu-pool``       HP/LP TPU chip pools x {bf16, int8} residency
+  ``tpu-pool-mixed`` same, heterogeneous fleet shapes (odd engines half)
+  ================== ==================================================
+
+Adding a backend is one :func:`register_substrate` call (DESIGN.md SS.5);
+use :mod:`repro.api` to construct schedulers/engines/fleets from a name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple, Union
+
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.energy import EnergyModel, Placement
+from repro.core.placement import PlacementLUT
+from repro.core.solvers import make_solver
+
+
+class Substrate:
+    """Protocol: everything Eq. (1) needs from one hardware platform."""
+
+    name: str
+    arch: sp.PIMArch
+    rho: float
+    solver: str                      # default solver registry key
+    lut_points: int
+    # True when the substrate can drive a functional serve engine
+    # (api.engine / api.fleet(decode=True)); accounting-only otherwise
+    supports_decode = False
+
+    # -- workload mapping --------------------------------------------------
+    def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
+        """Resolve a workload handle (name / ModelSpec / ModelConfig) to
+        the substrate's :class:`~repro.core.spaces.ModelSpec`. Extra
+        keywords are substrate-specific hints (e.g. ``tokens_per_task``)."""
+        raise NotImplementedError
+
+    # -- modeling ----------------------------------------------------------
+    def energy_model(self, workload=None, *, rho: Optional[float] = None,
+                     time_scale=None) -> EnergyModel:
+        return EnergyModel(self.arch, self.model_spec(workload),
+                           rho=self.rho if rho is None else rho,
+                           time_scale=time_scale)
+
+    def default_t_slice_ns(self, workload=None, *,
+                           rho: Optional[float] = None) -> float:
+        raise NotImplementedError
+
+    def build_lut(self, workload=None, *, solver=None,
+                  t_slice_ns: Optional[float] = None,
+                  n_points: Optional[int] = None,
+                  rho: Optional[float] = None) -> PlacementLUT:
+        em = self.energy_model(workload, rho=rho)
+        if t_slice_ns is None:
+            t_slice_ns = self.default_t_slice_ns(em.model, rho=rho)
+        return make_solver(solver or self.solver).build_lut(
+            em, t_slice_ns=t_slice_ns,
+            n_points=self.lut_points if n_points is None else n_points)
+
+    # -- functional placement ----------------------------------------------
+    def apply_placement(self, placement: Placement, sink=None) -> bool:
+        """Apply ``placement`` to the functional weight store ``sink``
+        (e.g. a serve engine). Accounting-only substrates return False -
+        placement lives purely in the energy/timing model."""
+        return False
+
+    # -- fleet shaping -----------------------------------------------------
+    def engine_variant(self, index: int) -> "Substrate":
+        """Substrate for fleet engine ``index`` (homogeneous: self)."""
+        return self
+
+    def variant_key(self) -> tuple:
+        """Hashable shape key; engines sharing it share one LUT."""
+        return (self.name,)
+
+    def replace(self, **kw) -> "Substrate":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSubstrate(Substrate):
+    """The paper's edge-PIM platforms (Tables I/III/V constants).
+
+    ``reference_arch`` sizes the default time slice: the paper's
+    comparison protocol gives every arch the slice that fits
+    ``workloads.PEAK_TASKS`` inferences at *HH-PIM* peak performance, so
+    savings are measured under identical deadlines.
+    """
+
+    name: str
+    arch: sp.PIMArch
+    rho: float = 1.0
+    solver: str = "closed-form"
+    lut_points: int = 64
+    reference_arch: Optional[sp.PIMArch] = None
+
+    def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
+        if workload is None:
+            return sp.EFFICIENTNET_B0
+        if isinstance(workload, sp.ModelSpec):
+            return workload
+        if isinstance(workload, str):
+            try:
+                return sp.TINYML_MODELS[workload]
+            except KeyError:
+                raise ValueError(
+                    f"unknown TinyML workload {workload!r}; one of "
+                    f"{sorted(sp.TINYML_MODELS)}") from None
+        raise TypeError(f"cannot interpret workload {workload!r} for "
+                        f"substrate {self.name}")
+
+    def default_t_slice_ns(self, workload=None, *,
+                           rho: Optional[float] = None,
+                           headroom: float = 1.01) -> float:
+        model = self.model_spec(workload)
+        em = EnergyModel(self.reference_arch or self.arch, model,
+                         rho=self.rho if rho is None else rho)
+        t_peak = em.task_cost(em.peak_placement(sram_only=True)).t_task_ns
+        return t_peak * workloads.PEAK_TASKS * headroom
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUPoolSubstrate(Substrate):
+    """HP/LP TPU chip pools with {bf16, int8} weight residency as the
+    storage spaces (DESIGN.md SS.3). ``mixed=True`` makes
+    :meth:`engine_variant` give odd-indexed fleet engines half the chips
+    (the heterogeneous-pool serving scenario)."""
+
+    supports_decode = True
+
+    name: str = "tpu-pool"
+    n_hp_chips: int = 4
+    n_lp_chips: int = 4
+    tokens_per_task: int = 8
+    rho: float = 64.0
+    solver: str = "closed-form"
+    lut_points: int = 32
+    peak_tasks: int = workloads.PEAK_TASKS
+    mixed: bool = False
+    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
+
+    def __post_init__(self):
+        from repro.serve.hetero import tpu_arch
+        object.__setattr__(self, "arch",
+                           tpu_arch(self.n_hp_chips, self.n_lp_chips))
+
+    def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
+        if isinstance(workload, sp.ModelSpec):
+            return workload
+        from repro.serve.hetero import tpu_model_spec
+        if workload is None:
+            from repro.configs import get_smoke_config
+            workload = get_smoke_config("internlm2_1_8b")
+        tokens = hint.get("tokens_per_task") or self.tokens_per_task
+        return tpu_model_spec(workload, tokens)
+
+    def default_t_slice_ns(self, workload=None, *,
+                           rho: Optional[float] = None) -> float:
+        from repro.serve.hetero import default_t_slice_ms
+        return default_t_slice_ms(
+            self.arch, self.model_spec(workload),
+            rho=self.rho if rho is None else rho,
+            peak_tasks=self.peak_tasks) * 1e6
+
+    def apply_placement(self, placement: Placement, sink=None) -> bool:
+        """Re-tier the sink engine's weights (real re-quantization and
+        column splits); accounting-only when no sink is attached."""
+        if sink is None:
+            return False
+        return sink.apply_placement(placement)
+
+    def chip_plan(self, index: int) -> Tuple[int, int]:
+        if self.mixed and index % 2 == 1:
+            return (max(self.n_hp_chips // 2, 1),
+                    max(self.n_lp_chips // 2, 1))
+        return (self.n_hp_chips, self.n_lp_chips)
+
+    def engine_variant(self, index: int) -> "TPUPoolSubstrate":
+        hp, lp = self.chip_plan(index)
+        if (hp, lp) == (self.n_hp_chips, self.n_lp_chips):
+            return self
+        return dataclasses.replace(self, n_hp_chips=hp, n_lp_chips=lp,
+                                   mixed=False)
+
+    def variant_key(self) -> tuple:
+        return (self.name, self.n_hp_chips, self.n_lp_chips)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+SubstrateFactory = Callable[..., Substrate]
+SUBSTRATES: Dict[str, SubstrateFactory] = {}
+
+
+def register_substrate(name: str, factory: SubstrateFactory) -> None:
+    SUBSTRATES[name] = factory
+
+
+def make_substrate(name: Union[str, Substrate], **over) -> Substrate:
+    """Build a substrate by registry name; keyword overrides go to the
+    factory (e.g. ``rho=``, ``n_hp_chips=``). Instances pass through
+    (overrides applied via ``dataclasses.replace``)."""
+    if isinstance(name, Substrate):
+        return name.replace(**over) if over else name
+    if name not in SUBSTRATES:
+        raise ValueError(
+            f"unknown substrate {name!r}; one of {sorted(SUBSTRATES)}")
+    return SUBSTRATES[name](**over)
+
+
+def available_substrates() -> Tuple[str, ...]:
+    return tuple(sorted(SUBSTRATES))
+
+
+def _edge_factory(name: str, arch_builder: Callable[..., sp.PIMArch],
+                  solver: str) -> SubstrateFactory:
+    def factory(*, rho: float = 1.0, solver: str = solver,
+                lut_points: int = 64, **arch_kw) -> EdgeSubstrate:
+        return EdgeSubstrate(name=name, arch=arch_builder(**arch_kw),
+                             rho=rho, solver=solver, lut_points=lut_points,
+                             reference_arch=sp.hh_pim())
+    return factory
+
+
+def _tpu_factory(name: str, mixed: bool) -> SubstrateFactory:
+    def factory(**kw) -> TPUPoolSubstrate:
+        return TPUPoolSubstrate(name=name, mixed=mixed, **kw)
+    return factory
+
+
+register_substrate("edge-hhpim",
+                   _edge_factory("edge-hhpim", sp.hh_pim, "closed-form"))
+register_substrate("edge-hetero",
+                   _edge_factory("edge-hetero", sp.hetero_pim,
+                                 "fixed-hetero"))
+register_substrate("edge-hybrid",
+                   _edge_factory("edge-hybrid", sp.hybrid_pim,
+                                 "fixed-hybrid"))
+register_substrate("edge-baseline",
+                   _edge_factory("edge-baseline", sp.baseline_pim,
+                                 "fixed-baseline"))
+register_substrate("tpu-pool", _tpu_factory("tpu-pool", mixed=False))
+register_substrate("tpu-pool-mixed",
+                   _tpu_factory("tpu-pool-mixed", mixed=True))

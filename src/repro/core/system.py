@@ -1,4 +1,9 @@
-"""End-to-end HH-PIM system simulation: scenarios -> energy/latency traces."""
+"""End-to-end HH-PIM system simulation: scenarios -> energy/latency traces.
+
+All runtimes are constructed through the ``repro.api`` facade; ``kind``
+and ``solver`` select substrate/solver registry entries, so adding an
+arch variant or placement strategy needs no change here.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,9 +11,7 @@ from typing import Dict, List, Optional
 
 from repro.core import spaces as sp
 from repro.core import workloads
-from repro.core.baselines import make_baseline_scheduler
-from repro.core.energy import EnergyModel
-from repro.core.scheduler import SliceReport, TimeSliceScheduler
+from repro.core.scheduler import SliceReport
 
 
 @dataclasses.dataclass
@@ -26,34 +29,39 @@ def default_t_slice_ns(model: sp.ModelSpec, rho: float = 1.0,
     """Time slice sized to fit PEAK_TASKS inferences at HH-PIM peak perf
     (paper: 'up to 10 inferences per time slice'), plus 1% headroom so a
     placement migration can be absorbed in a full-load slice."""
-    em = EnergyModel(sp.hh_pim(), model, rho=rho)
-    t_peak = em.task_cost(em.peak_placement(sram_only=True)).t_task_ns
-    return t_peak * workloads.PEAK_TASKS * headroom
+    from repro.core.substrate import make_substrate
+    return make_substrate("edge-hhpim").default_t_slice_ns(
+        model, rho=rho, headroom=headroom)
+
+
+def _run_scenario(sched, arch_tag: str, model: sp.ModelSpec, scenario: str
+                  ) -> ScenarioResult:
+    reports = sched.run(workloads.SCENARIOS[scenario])
+    return ScenarioResult(
+        arch_tag, model.name, scenario,
+        sum(r.energy_pj for r in reports) * 1e-6,
+        sum(not r.deadline_met for r in reports), reports)
 
 
 def run_hh_pim(model: sp.ModelSpec, scenario: str, *, rho: float = 1.0,
                t_slice_ns: Optional[float] = None,
-               lut_points: int = 64) -> ScenarioResult:
+               lut_points: int = 64,
+               solver: Optional[str] = None) -> ScenarioResult:
+    from repro import api
     t_slice = t_slice_ns or default_t_slice_ns(model, rho)
-    sched = TimeSliceScheduler(sp.hh_pim(), model, t_slice_ns=t_slice,
-                               rho=rho, lut_points=lut_points)
-    reports = sched.run(workloads.SCENARIOS[scenario])
-    return ScenarioResult(
-        "hh_pim", model.name, scenario,
-        sum(r.energy_pj for r in reports) * 1e-6,
-        sum(not r.deadline_met for r in reports), reports)
+    sched = api.scheduler("edge-hhpim", model, t_slice_ns=t_slice, rho=rho,
+                          lut_points=lut_points, solver=solver)
+    return _run_scenario(sched, "hh_pim", model, scenario)
 
 
 def run_baseline(kind: str, model: sp.ModelSpec, scenario: str, *,
                  rho: float = 1.0, t_slice_ns: Optional[float] = None
                  ) -> ScenarioResult:
+    from repro import api
     t_slice = t_slice_ns or default_t_slice_ns(model, rho)
-    sched = make_baseline_scheduler(kind, model, t_slice_ns=t_slice, rho=rho)
-    reports = sched.run(workloads.SCENARIOS[scenario])
-    return ScenarioResult(
-        f"{kind}_pim", model.name, scenario,
-        sum(r.energy_pj for r in reports) * 1e-6,
-        sum(not r.deadline_met for r in reports), reports)
+    sched = api.scheduler(f"edge-{kind}", model, t_slice_ns=t_slice,
+                          rho=rho)
+    return _run_scenario(sched, f"{kind}_pim", model, scenario)
 
 
 def energy_savings_table(model: sp.ModelSpec, *, rho: float = 1.0,

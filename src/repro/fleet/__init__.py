@@ -8,18 +8,17 @@ the scheduler's ``lookup_tasks`` hook, an SLO-aware router with admission
 control (:mod:`repro.fleet.router`), and tail-latency/energy aggregation
 (:mod:`repro.fleet.metrics`).
 
-``build_fleet`` wires everything for the TPU parameterization of
-``repro.serve.hetero`` (shared placement LUT across identical engines;
-optionally a real ``HeteroServeEngine`` per worker so placements are
-functionally exercised by decoding tokens through re-tiered weights).
+Fleets are canonically constructed through ``repro.api.fleet`` (substrate
+registry + shared placement LUT per engine shape; optionally a real
+``HeteroServeEngine`` per worker so placements are functionally exercised
+by decoding tokens through re-tiered weights). ``build_fleet`` remains as
+a one-release deprecation shim over ``api.fleet("tpu-pool[-mixed]")``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
-from repro.core import workloads
-from repro.core.placement import build_lut
-from repro.core.scheduler import TimeSliceScheduler
 from repro.fleet.forecast import (FORECASTERS, Forecaster,  # noqa: F401
                                   make_forecaster)
 from repro.fleet.metrics import FleetSummary, summarize  # noqa: F401
@@ -45,63 +44,22 @@ def build_fleet(cfg=None, *, n_engines: int = 2, forecaster: str = "ewma",
                 slo_slices: float = 2.0, forecast_margin: float = 1.0,
                 params=None, decode: bool = False, max_batch: int = 16,
                 forecaster_kw: Optional[dict] = None) -> Fleet:
-    """Construct a fleet of ``n_engines`` TPU-parameterized serve engines.
+    """Deprecated shim: construct through ``repro.api.fleet`` instead.
 
-    ``mixed=True`` builds a heterogeneous pool (odd-indexed engines get half
-    the chips), which is where the ``slo`` routing policy earns its keep.
-    ``decode=True`` attaches a real ``HeteroServeEngine`` (requires
-    ``params``) per worker: every slice's placement is applied as an actual
-    weight re-tiering and one decode step runs through the tiered model.
+    ``mixed=True`` maps to the ``tpu-pool-mixed`` substrate (odd-indexed
+    engines get half the chips); everything else forwards unchanged.
     """
-    from repro.serve.hetero import tpu_arch, tpu_model_spec
-
-    if cfg is None:
-        from repro.configs import get_smoke_config
-        cfg = get_smoke_config("internlm2_1_8b")
-    model = tpu_model_spec(cfg, tokens_per_task)
-
-    chip_plan = []
-    for i in range(n_engines):
-        if mixed and i % 2 == 1:
-            chip_plan.append((max(hp_chips // 2, 1), max(lp_chips // 2, 1)))
-        else:
-            chip_plan.append((hp_chips, lp_chips))
-    archs = {plan: tpu_arch(*plan) for plan in set(chip_plan)}
-
-    if t_slice_ms is None:
-        # fleet-wide slice = the fastest engine shape's default sizing
-        from repro.serve.hetero import default_t_slice_ms
-        t_slice_ms = min(
-            default_t_slice_ms(a, model, rho=rho,
-                               peak_tasks=workloads.PEAK_TASKS)
-            for a in archs.values())
-    t_slice_ns = t_slice_ms * 1e6
-
-    # one LUT per distinct engine shape, shared by all its instances
-    luts = {plan: build_lut(arch, model, t_slice_ns=t_slice_ns, rho=rho,
-                            n_points=lut_points)
-            for plan, arch in archs.items()}
-
-    workers = []
-    for i, plan in enumerate(chip_plan):
-        hetero = None
-        if decode:
-            from repro.serve.hetero import HeteroServeEngine
-            if params is None:
-                raise ValueError("decode=True requires model params")
-            hetero = HeteroServeEngine(
-                cfg, params, t_slice_ms=t_slice_ns / 1e6,
-                n_hp_chips=plan[0], n_lp_chips=plan[1],
-                tokens_per_task=tokens_per_task, rho=rho,
-                max_batch=max_batch)
-            sched = hetero.sched
-            sched._lut_cache[sched._slowdown_key()] = luts[plan]
-        else:
-            sched = TimeSliceScheduler(
-                archs[plan], model, t_slice_ns=t_slice_ns, rho=rho,
-                lut=luts[plan], lut_points=lut_points)
-        workers.append(EngineWorker(
-            i, sched, make_forecaster(forecaster, **(forecaster_kw or {})),
-            hetero=hetero, forecast_margin=forecast_margin))
-    return Fleet(workers, policy=policy, admission_limit=admission_limit,
-                 slo_slices=slo_slices, tokens_per_request=tokens_per_task)
+    warnings.warn(
+        "build_fleet is deprecated; use repro.api.fleet("
+        "'tpu-pool' / 'tpu-pool-mixed', ...) instead (DESIGN.md SS.5)",
+        DeprecationWarning, stacklevel=2)
+    from repro import api
+    return api.fleet(
+        "tpu-pool-mixed" if mixed else "tpu-pool", cfg,
+        n_engines=n_engines, forecaster=forecaster, policy=policy,
+        tokens_per_task=tokens_per_task, rho=rho, t_slice_ms=t_slice_ms,
+        lut_points=lut_points, admission_limit=admission_limit,
+        slo_slices=slo_slices, forecast_margin=forecast_margin,
+        params=params, decode=decode, max_batch=max_batch,
+        forecaster_kw=forecaster_kw,
+        n_hp_chips=hp_chips, n_lp_chips=lp_chips)

@@ -45,11 +45,14 @@ class EngineWorker:
 
     def __init__(self, wid: int, sched: TimeSliceScheduler,
                  forecaster: Optional[Forecaster] = None, *,
-                 hetero=None, forecast_margin: float = 1.0):
+                 hetero=None, substrate=None, forecast_margin: float = 1.0):
         self.wid = wid
         self.sched = sched
         self.forecaster = forecaster or NoForecast()
         self.hetero = hetero              # optional HeteroServeEngine
+        # optional Substrate: placement application is routed through its
+        # apply_placement (functional re-tiering where the platform has one)
+        self.substrate = substrate
         self.forecast_margin = forecast_margin
         self.backlog: List[FleetRequest] = []
         self.reports: List[SliceReport] = []
@@ -103,10 +106,12 @@ class EngineWorker:
             req.latency_ns = ((slice_idx - req.arrival_slice) * T
                               + rep.t_move_ns + (i + 1) * t_task)
             self.tokens_decoded += req.tokens
-        if self.hetero is not None:
+        if self.substrate is not None:
+            self.substrate.apply_placement(rep.placement, sink=self.hetero)
+        elif self.hetero is not None:
             self.hetero.apply_placement(rep.placement)
-            if n_done:
-                self.hetero.decode(n_done)
+        if self.hetero is not None and n_done:
+            self.hetero.decode(n_done)
         return done
 
 

@@ -63,6 +63,28 @@ def _memory(compiled) -> dict:
         return {"error": repr(e)}
 
 
+def _substrate_summary(cfg, name: str) -> dict:
+    """Serving-substrate coherence check for one arch: the registry entry
+    must map the config to a model spec and yield a feasible placement LUT
+    at the default slice (the placement analogue of "does it compile")."""
+    from repro import api
+    try:
+        sub = api.substrate(name)
+        model = sub.model_spec(cfg)
+        t_ns = sub.default_t_slice_ns(model)
+        lut = sub.build_lut(model, t_slice_ns=t_ns)
+        feasible = [e for e in lut.entries if e.feasible]
+        return {"substrate": name, "model_spec": model.name,
+                "n_params": model.n_params,
+                "t_slice_ms": round(t_ns / 1e6, 6),
+                "lut_entries": len(lut.entries),
+                "lut_feasible": len(feasible),
+                "min_feasible_t_ms": (round(lut.min_feasible_t_ns / 1e6, 6)
+                                      if feasible else None)}
+    except Exception as e:
+        return {"substrate": name, "error": repr(e)}
+
+
 def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 8):
     """Build and lower one cell; returns (lowered, meta)."""
     cfg = sp.dryrun_config(get_config(arch), mesh)
@@ -153,7 +175,7 @@ def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 8):
 
 
 def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
-             force: bool = False) -> dict:
+             force: bool = False, substrate: str = "tpu-pool") -> dict:
     tag = f"{arch}__{shape}__{mesh_kind}"
     out_file = out_dir / f"{tag}.json"
     if out_file.exists() and not force:
@@ -164,6 +186,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
     try:
         lowered, meta = lower_cell(arch, shape, mesh)
         rec.update(meta)
+        if substrate and substrate != "none" and meta.get("kind") == "decode":
+            rec["substrate"] = _substrate_summary(get_config(arch), substrate)
         if lowered is None:
             rec["status"] = "skipped"
         else:
@@ -191,6 +215,9 @@ def main() -> None:
     ap.add_argument("--mesh", default="single,multi")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--substrate", default="tpu-pool",
+                    help="serving substrate to sanity-check per decode "
+                         "cell ('none' to skip)")
     args = ap.parse_args()
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
@@ -203,7 +230,7 @@ def main() -> None:
         for shape in shapes:
             for mesh_kind in meshes:
                 rec = run_cell(arch, shape, mesh_kind, out_dir,
-                               force=args.force)
+                               force=args.force, substrate=args.substrate)
                 status = rec.get("status")
                 n_ok += status == "ok"
                 n_skip += status == "skipped"

@@ -17,7 +17,8 @@ from __future__ import annotations
 import argparse
 import json
 
-from repro.fleet import build_fleet, make_trace, summarize
+from repro import api
+from repro.fleet import make_trace, summarize
 from repro.fleet.forecast import FORECASTERS
 from repro.fleet.router import POLICIES
 from repro.fleet.traces import TRACES
@@ -39,6 +40,11 @@ def main(argv=None) -> None:
                     help="forecast over-provisioning factor")
     ap.add_argument("--admission-limit", type=int, default=None,
                     help="max queued tasks per engine before rejecting")
+    ap.add_argument("--substrate", default=None,
+                    help=f"one of {api.available_substrates()} "
+                         f"(default tpu-pool; --mixed => tpu-pool-mixed)")
+    ap.add_argument("--solver", default=None,
+                    help=f"placement solver, one of {sorted(api.SOLVERS)}")
     ap.add_argument("--mixed", action="store_true",
                     help="heterogeneous pool: odd engines get half chips")
     ap.add_argument("--tokens-per-task", type=int, default=2)
@@ -56,6 +62,17 @@ def main(argv=None) -> None:
     if args.requests is not None:
         trace = trace.truncated(args.requests)
 
+    if args.substrate and args.mixed and args.substrate != "tpu-pool-mixed":
+        raise SystemExit(
+            f"--mixed conflicts with --substrate {args.substrate}; "
+            f"use --substrate tpu-pool-mixed (or drop --mixed)")
+    substrate = args.substrate or ("tpu-pool-mixed" if args.mixed
+                                   else "tpu-pool")
+    if args.decode and not api.substrate(substrate).supports_decode:
+        print(f"substrate {substrate} is accounting-only (no functional "
+              f"decode engine); running as --no-decode")
+        args.decode = False
+
     params = cfg = None
     if args.decode:
         import jax
@@ -66,15 +83,16 @@ def main(argv=None) -> None:
         print(f"arch={canonical(args.arch)} ({cfg.n_layers}L "
               f"d={cfg.d_model}, reduced config)")
 
-    fleet = build_fleet(
-        cfg, n_engines=args.engines, forecaster=args.forecaster,
-        policy=args.policy, mixed=args.mixed,
-        tokens_per_task=args.tokens_per_task,
+    over = {"solver": args.solver} if args.solver else {}
+    fleet = api.fleet(
+        substrate, cfg, n_engines=args.engines, forecaster=args.forecaster,
+        policy=args.policy, tokens_per_task=args.tokens_per_task,
         admission_limit=args.admission_limit,
-        forecast_margin=args.margin, params=params, decode=args.decode)
+        forecast_margin=args.margin, params=params, decode=args.decode,
+        **over)
 
     T_us = fleet.workers[0].t_slice_ns / 1e3
-    print(f"fleet: {args.engines} engines{' (mixed)' if args.mixed else ''}"
+    print(f"fleet: {args.engines} engines on {substrate}"
           f", policy={args.policy}, forecaster={args.forecaster}, "
           f"t_slice={T_us:.2f} us, trace={trace.name} "
           f"({trace.total} requests / {len(trace)} slices, "

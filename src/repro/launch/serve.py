@@ -6,6 +6,8 @@ Two modes:
   * ``--engine hetero`` - the HH-PIM heterogeneous runtime: requests flow
     through time slices, weight placement re-solved per slice across
     {hp,lp} x {bf16,int8} tiers (the paper's technique, TPU constants).
+    Built through the ``repro.api`` facade; ``--substrate`` / ``--solver``
+    pick registry entries (DESIGN.md SS.5).
 """
 from __future__ import annotations
 
@@ -13,11 +15,11 @@ import argparse
 
 import jax
 
+from repro import api
 from repro.configs import ARCH_IDS, canonical, get_smoke_config
 from repro.core import workloads
 from repro.models import lm
 from repro.serve.engine import DecodeEngine, Request
-from repro.serve.hetero import HeteroServeEngine
 
 
 def main() -> None:
@@ -29,6 +31,10 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--scenario", default="case6_random")
+    ap.add_argument("--substrate", default="tpu-pool",
+                    help=f"one of {api.available_substrates()}")
+    ap.add_argument("--solver", default=None,
+                    help=f"placement solver, one of {sorted(api.SOLVERS)}")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -47,7 +53,11 @@ def main() -> None:
                   f"{req.out[:8]}")
         return
 
-    eng = HeteroServeEngine(cfg, params, max_batch=4)
+    over = {"solver": args.solver} if args.solver else {}
+    try:
+        eng = api.engine(args.substrate, cfg, params, max_batch=4, **over)
+    except ValueError as e:
+        raise SystemExit(str(e))
     loads = workloads.SCENARIOS[args.scenario][:10]
     print(f"time slice {eng.t_slice_ms:.3f} ms; loads {loads}")
     for i, n in enumerate(loads):

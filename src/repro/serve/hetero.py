@@ -115,26 +115,41 @@ class HeteroSliceResult:
 
 
 class HeteroServeEngine:
-    """Time-sliced decode engine with placement-driven weight tiering."""
+    """Time-sliced decode engine with placement-driven weight tiering.
+
+    Canonically constructed through ``repro.api.engine("tpu-pool", ...)``;
+    the chip-count/rho keywords remain for direct use and are folded into
+    a ``tpu-pool`` substrate when none is passed.
+    """
 
     def __init__(self, cfg: ModelConfig, params, *,
                  t_slice_ms: Optional[float] = None,
                  n_hp_chips: int = 4, n_lp_chips: int = 4,
                  tokens_per_task: int = 8, rho: float = 64.0,
-                 max_batch: int = 16, peak_tasks: int = 10, seed: int = 0):
+                 max_batch: int = 16, peak_tasks: int = 10, seed: int = 0,
+                 substrate=None):
+        from repro.core.substrate import make_substrate
+        if substrate is None:
+            # rho: weight-stationary reuse on TPU = tokens sharing one
+            # weight fetch per batch step (batched decode reads W once)
+            substrate = make_substrate(
+                "tpu-pool", n_hp_chips=n_hp_chips, n_lp_chips=n_lp_chips,
+                tokens_per_task=tokens_per_task, rho=rho,
+                peak_tasks=peak_tasks)
+        if cfg is None:
+            from repro.configs import get_smoke_config
+            cfg = get_smoke_config("internlm2_1_8b")
         self.cfg = cfg
         self.params = params
-        self.arch = tpu_arch(n_hp_chips, n_lp_chips)
-        self.model_spec = tpu_model_spec(cfg, tokens_per_task)
-        # rho: weight-stationary reuse on TPU = tokens sharing one weight
-        # fetch per batch step (batched decode reads W once per batch)
+        self.substrate = substrate
+        self.arch = substrate.arch
+        self.model_spec = substrate.model_spec(cfg)
         if t_slice_ms is None:
-            t_slice_ms = default_t_slice_ms(self.arch, self.model_spec,
-                                            rho=rho, peak_tasks=peak_tasks)
+            t_slice_ms = substrate.default_t_slice_ns(self.model_spec) / 1e6
         self.t_slice_ms = t_slice_ms
-        self.sched = TimeSliceScheduler(
-            self.arch, self.model_spec, t_slice_ns=t_slice_ms * 1e6,
-            rho=rho, lut_points=32)
+        self.sched = TimeSliceScheduler.from_substrate(
+            substrate, self.model_spec, t_slice_ns=t_slice_ms * 1e6,
+            lut_points=32)
         self.max_batch = max_batch
         self._tiered: Optional[Dict] = None
         self._tiered_placement: Optional[Dict[str, int]] = None

@@ -1,0 +1,182 @@
+"""Tests for the repro.api facade: substrate/solver registries,
+equivalence of the facade construction path with the legacy constructors,
+and the one-release deprecation shims."""
+import warnings
+
+import pytest
+
+from repro import api
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.scheduler import FixedPlacementScheduler, TimeSliceScheduler
+from repro.core.system import default_t_slice_ns
+
+RHO = 4.0
+
+EDGE_SUBSTRATES = ("edge-hhpim", "edge-hetero", "edge-hybrid",
+                   "edge-baseline")
+TPU_SUBSTRATES = ("tpu-pool", "tpu-pool-mixed")
+FIXED_SOLVERS = ("fixed-baseline", "fixed-hetero", "fixed-hybrid")
+
+
+def _legacy(arch, model, T, **kw):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return TimeSliceScheduler(arch, model, t_slice_ns=T, **kw)
+
+
+# -- registries --------------------------------------------------------------
+
+
+def test_registries_cover_issue_contract():
+    assert set(api.SUBSTRATES) >= set(EDGE_SUBSTRATES) | set(TPU_SUBSTRATES)
+    assert set(api.SOLVERS) >= {"dp", "closed-form", *FIXED_SOLVERS}
+    with pytest.raises(ValueError):
+        api.substrate("edge-nope")
+    with pytest.raises(ValueError):
+        api.solver("simulated-annealing")
+
+
+@pytest.mark.parametrize("name", EDGE_SUBSTRATES)
+def test_every_edge_substrate_schedules_a_slice(name):
+    sched = api.scheduler(name, sp.MOBILENET_V2, rho=RHO, lut_points=8)
+    rep = sched.step(2)
+    assert rep.n_tasks == 2
+    assert rep.energy_pj > 0
+    # dynamic HH-PIM gets the migrating runtime, fixed policies don't
+    if name == "edge-hhpim":
+        assert isinstance(sched, TimeSliceScheduler)
+    else:
+        assert isinstance(sched, FixedPlacementScheduler)
+
+
+def test_substrate_overrides_reach_the_factory():
+    sub = api.substrate("tpu-pool", n_hp_chips=2, n_lp_chips=6)
+    assert sub.arch.cluster("hp").n_modules == 2
+    assert sub.arch.cluster("lp").n_modules == 6
+    small = api.substrate("tpu-pool-mixed").engine_variant(1)
+    assert small.arch.cluster("hp").n_modules == 2
+
+
+def test_fixed_solvers_build_single_entry_luts():
+    sub = api.substrate("edge-hybrid")
+    for name in FIXED_SOLVERS:
+        lut = sub.build_lut(sp.EFFICIENTNET_B0, solver=name,
+                            t_slice_ns=1e9, rho=RHO)
+        assert len(lut.entries) == 1 and lut.entries[0].feasible
+        assert lut.lookup(1e9).placement == lut.entries[0].placement
+
+
+# -- equivalence: facade path vs legacy constructors -------------------------
+
+
+def test_edge_hhpim_lut_and_reports_match_legacy():
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, RHO)
+    legacy = _legacy(sp.hh_pim(), m, T, rho=RHO, lut_points=24)
+    new = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                        lut_points=24)
+    assert legacy.lut.entries == new.lut.entries  # byte-identical LUT
+    loads = workloads.SCENARIOS["case6_random"][:12]
+    assert [legacy.step(n) for n in loads] == [new.step(n) for n in loads]
+
+
+def test_tpu_pool_lut_and_reports_match_legacy():
+    from repro.configs import get_smoke_config
+    from repro.serve.hetero import (default_t_slice_ms, tpu_arch,
+                                    tpu_model_spec)
+    cfg = get_smoke_config("internlm2_1_8b")
+    model = tpu_model_spec(cfg, 2)
+    T = default_t_slice_ms(tpu_arch(), model, rho=64.0, peak_tasks=10) * 1e6
+    legacy = _legacy(tpu_arch(), model, T, rho=64.0, lut_points=32)
+    new = api.scheduler("tpu-pool", cfg, tokens_per_task=2, lut_points=32)
+    assert new.t_slice_ns == pytest.approx(T, rel=0, abs=0)
+    assert legacy.lut.entries == new.lut.entries
+    assert [legacy.step(n) for n in (4, 1, 8)] == \
+        [new.step(n) for n in (4, 1, 8)]
+
+
+def test_fixed_substrates_match_legacy_policies():
+    from repro.core.baselines import (baseline_policy, hetero_policy,
+                                      hybrid_policy)
+    m = sp.RESNET_18
+    for name, policy in (("edge-baseline", baseline_policy(m)[1]),
+                         ("edge-hetero", hetero_policy(m, RHO)[1]),
+                         ("edge-hybrid", hybrid_policy(m)[1])):
+        sched = api.scheduler(name, m, rho=RHO)
+        assert sched.placement == policy, name
+
+
+def test_dp_and_closed_form_agree_on_paper_cases():
+    """The verbatim Algorithm 1+2 DP and the closed-form solver, selected
+    by registry name, agree on the paper's six workload cases: identical
+    deadline behaviour and energy within the DP's tick-quantization slack."""
+    from repro.core.system import run_hh_pim
+    m = sp.EFFICIENTNET_B0
+    for scen in workloads.SCENARIOS:
+        cf = run_hh_pim(m, scen, rho=RHO, lut_points=24,
+                        solver="closed-form")
+        dp = run_hh_pim(m, scen, rho=RHO, lut_points=24, solver="dp")
+        assert cf.deadline_miss == dp.deadline_miss == 0, scen
+        assert dp.energy_uj == pytest.approx(cf.energy_uj, rel=0.10), scen
+
+
+def test_api_fleet_matches_legacy_build_fleet():
+    from repro.fleet import build_fleet, summarize
+    from repro.fleet.traces import replay_trace
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = build_fleet(n_engines=2, forecaster="none", mixed=True)
+    new = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none")
+    s_legacy = summarize(legacy.run(replay_trace([8, 8, 8, 8])))
+    s_new = summarize(new.run(replay_trace([8, 8, 8, 8])))
+    assert s_legacy == s_new
+
+
+# -- deprecation shims -------------------------------------------------------
+
+
+def test_legacy_scheduler_constructor_warns_once_and_works():
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, RHO)
+    with pytest.warns(DeprecationWarning) as rec:
+        sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
+                                   lut_points=8)
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+    assert sched.step(2).deadline_met
+
+
+def test_legacy_make_baseline_scheduler_warns_once_and_works():
+    from repro.core.baselines import make_baseline_scheduler
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, RHO)
+    with pytest.warns(DeprecationWarning) as rec:
+        sched = make_baseline_scheduler("hybrid", m, t_slice_ns=T, rho=RHO)
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+    assert sched.step(2).n_tasks == 2
+    with pytest.raises(ValueError):
+        make_baseline_scheduler("nope", m, t_slice_ns=T)
+
+
+def test_legacy_build_fleet_warns_once_and_works():
+    from repro.fleet import build_fleet
+    from repro.fleet.traces import replay_trace
+    with pytest.warns(DeprecationWarning) as rec:
+        fleet = build_fleet(n_engines=1, forecaster="none")
+    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
+    res = fleet.run(replay_trace([2, 1]))
+    assert len(res.completed) == 3
+
+
+def test_facade_path_emits_no_deprecation_warnings():
+    from repro.fleet.traces import replay_trace
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        api.scheduler("edge-hhpim", sp.MOBILENET_V2, rho=RHO,
+                      lut_points=8).step(2)
+        api.fleet("tpu-pool", n_engines=1,
+                  forecaster="none").run(replay_trace([2]))
+    ours = [w for w in rec if issubclass(w.category, DeprecationWarning)
+            and "deprecated" in str(w.message).lower()
+            and "repro" in str(w.filename)]
+    assert ours == []

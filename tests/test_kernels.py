@@ -1,10 +1,14 @@
 """Pallas kernel validation: interpret-mode kernel vs pure-jnp oracle,
-swept over shapes, block sizes and dtypes (assignment requirement)."""
+swept over shapes, block sizes and dtypes (assignment requirement).
+
+hypothesis is an optional dependency: without it only the property-based
+tests are skipped; the deterministic shape sweeps still run.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.core.placement import dp_min_energy
 from repro.kernels.knapsack_dp.ops import knapsack_dp

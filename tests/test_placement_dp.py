@@ -1,10 +1,14 @@
-"""Unit + property tests for the placement solvers (paper SS.III)."""
+"""Unit + property tests for the placement solvers (paper SS.III).
+
+hypothesis is an optional dependency: without it only the property-based
+tests are skipped; the deterministic DP/LUT tests still run.
+"""
 import itertools
 
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.core import spaces as sp
 from repro.core.energy import EnergyModel, validate_placement

@@ -1,10 +1,14 @@
-"""Substrate tests: data, quant, optimizers, compression, checkpointing."""
+"""Substrate tests: data, quant, optimizers, compression, checkpointing.
+
+hypothesis is an optional dependency: without it only the property-based
+tests are skipped; the deterministic tests below still run.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-pytest.importorskip("hypothesis")   # property tests need hypothesis
-from hypothesis import given, settings, strategies as st
+
+from conftest import given, settings, st
 
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.optim.adamw import OptimizerConfig, make_optimizer
