@@ -211,9 +211,77 @@ def solver_agreement() -> Tuple[List[Dict], Dict]:
                      "dp_misses": dp.deadline_miss,
                      "cf_build_s": round(res["closed-form_s"], 3),
                      "dp_build_s": round(res["dp_s"], 3)})
+    misses_agree = all(r["cf_misses"] == r["dp_misses"] for r in rows)
     derived = {"max_energy_dev_pct": round(float(np.max(devs)), 3),
-               "misses_agree": all(r["cf_misses"] == r["dp_misses"]
-                                   for r in rows)}
+               "misses_agree": misses_agree,
+               "agreement_ok": bool(misses_agree and float(np.max(devs))
+                                    <= SOLVER_AGREEMENT_TOL_PCT)}
+    return rows, derived
+
+
+# dp's tick quantization + LUT-grid path dependence budget, shared by the
+# solver_agreement table (edge) and the pool_substrates gpu check and
+# gated in CI (benchmarks/run.py --gate).
+SOLVER_AGREEMENT_TOL_PCT = 10.0
+
+
+def pool_substrates() -> Tuple[List[Dict], Dict]:
+    """gpu-pool vs tpu-pool across the six workload cases under each
+    substrate's own slice protocol (scheduler runs, closed-form solver),
+    plus the dp/closed-form cross-check on the gpu backend - the registry
+    analogue of Fig. 5 for the serving pools."""
+    subs = {name: api.substrate(name, tokens_per_task=2)
+            for name in ("tpu-pool", "gpu-pool")}
+    ctx = {}
+    for name, sub in subs.items():
+        model = sub.model_spec()
+        ctx[name] = (sub, model, sub.default_t_slice_ns(model))
+    rows = []
+    gpu_cf = {}         # scenario -> (energy_pj, misses), reused below
+    for scen, loads in workloads.SCENARIOS.items():
+        row: Dict = {"scenario": scen}
+        for name, (sub, model, T) in ctx.items():
+            sched = api.scheduler(sub, model, t_slice_ns=T, lut_points=24)
+            reports = sched.run(loads)
+            key = name.split("-")[0]
+            e_pj = sum(r.energy_pj for r in reports)
+            misses = sum(not r.deadline_met for r in reports)
+            row[f"{key}_uj"] = round(e_pj * 1e-6, 1)
+            row[f"{key}_misses"] = misses
+            row[f"{key}_migrating_slices"] = sum(r.moved_weights > 0
+                                                 for r in reports)
+            if name == "gpu-pool":
+                gpu_cf[scen] = (e_pj, misses)
+        row["gpu_over_tpu"] = round(row["gpu_uj"] / row["tpu_uj"], 3)
+        rows.append(row)
+
+    # gpu dp vs closed-form cross-check: same cases, closed-form totals
+    # reused from above, one dp LUT shared by all scenarios
+    sub, model, T = ctx["gpu-pool"]
+    dp_lut = sub.build_lut(model, t_slice_ns=T, n_points=24, solver="dp")
+    devs = []
+    misses_agree = True
+    for scen, loads in workloads.SCENARIOS.items():
+        sched = api.scheduler(sub, model, t_slice_ns=T, lut_points=24,
+                              solver="dp", lut=dp_lut)
+        reports = sched.run(loads)
+        dp = (sum(r.energy_pj for r in reports),
+              sum(not r.deadline_met for r in reports))
+        cf = gpu_cf[scen]
+        devs.append(abs(100 * (dp[0] / cf[0] - 1)))
+        misses_agree &= cf[1] == dp[1]
+
+    derived = {
+        "mean_gpu_over_tpu": round(float(np.mean(
+            [r["gpu_over_tpu"] for r in rows])), 3),
+        "misses_match_tpu": all(r["gpu_misses"] == r["tpu_misses"]
+                                for r in rows),
+        "gpu_dp_max_dev_pct": round(float(np.max(devs)), 3),
+        "gpu_dp_misses_agree": misses_agree,
+        "gpu_solver_agreement_ok": bool(
+            misses_agree
+            and float(np.max(devs)) <= SOLVER_AGREEMENT_TOL_PCT),
+    }
     return rows, derived
 
 
@@ -225,4 +293,5 @@ ALL = {
     "table6_cases": table6_cases,
     "fig4_scheduler_latency": fig4_scheduler_latency,
     "solver_agreement": solver_agreement,
+    "pool_substrates": pool_substrates,
 }

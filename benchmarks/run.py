@@ -6,38 +6,81 @@ holds the headline numbers compared to the paper's claims. Row-level detail
 is written to benchmarks/results/<name>.csv. The tables construct their
 stacks through ``repro.api`` (see benchmarks/paper_tables.py); ``--only``
 filters by table-name substring.
+
+CI runs ``--quick`` (the cheap subset below), writes the derived numbers to
+a JSON artifact with ``--json``, and turns the solver cross-checks into
+required checks with ``--gate`` (exit 1 when a gated table's
+``agreement_ok`` / ``*_solver_agreement_ok`` flag is false).
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import json
+import sys
 import time
 from pathlib import Path
 
 from benchmarks import paper_tables
+
+# cheap-enough-for-every-PR subset: the per-space constants table plus the
+# two solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools)
+QUICK = ("table5_power", "solver_agreement", "pool_substrates")
+
+# name -> (flag inside the table's derived dict that must be true)
+GATES = {
+    "solver_agreement": "agreement_ok",
+    "pool_substrates": "gpu_solver_agreement_ok",
+}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run only tables whose name contains this")
+    ap.add_argument("--quick", action="store_true",
+                    help=f"run only the CI subset {QUICK}")
+    ap.add_argument("--json", default=None,
+                    help="write all derived numbers to this path as JSON")
+    ap.add_argument("--gate", action="append", default=None,
+                    choices=sorted(GATES),
+                    help="fail (exit 1) unless this table's agreement "
+                         "flag is true; repeatable")
     args = ap.parse_args()
     out_dir = Path(__file__).parent / "results"
     out_dir.mkdir(exist_ok=True)
+    derived_all = {}
     print("name,us_per_call,derived")
     for name, fn in paper_tables.ALL.items():
         if args.only and args.only not in name:
             continue
+        if args.quick and name not in QUICK:
+            continue
         t0 = time.perf_counter()
         rows, derived = fn()
         us = (time.perf_counter() - t0) * 1e6
+        derived_all[name] = derived
         if rows:
             with open(out_dir / f"{name}.csv", "w", newline="") as f:
                 w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
                 w.writeheader()
                 w.writerows(rows)
         print(f"{name},{us:.0f},{json.dumps(derived)}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(derived_all, f, indent=2)
+        print(f"wrote {args.json}", file=sys.stderr)
+    failed = []
+    for gate in args.gate or ():
+        if gate not in derived_all:
+            failed.append(f"{gate}: gated table did not run")
+        elif not derived_all[gate].get(GATES[gate]):
+            failed.append(f"{gate}: {GATES[gate]} is false "
+                          f"({json.dumps(derived_all[gate])})")
+    if failed:
+        for msg in failed:
+            print(f"GATE FAILED {msg}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -1,8 +1,13 @@
-"""Fig. 6 sweep for all three TinyML benchmarks + rho sensitivity.
+"""Fig. 6 sweep for all three TinyML benchmarks + rho sensitivity, plus
+the gpu-pool DVFS frontier.
 
 Shows how the optimal placement and E_task evolve with t_constraint for
-EfficientNet-B0 / MobileNetV2 / ResNet-18, and how the weight-reuse factor
-rho moves the LP-MRAM-only crossover (DESIGN.md SS.2 modeling note).
+EfficientNet-B0 / MobileNetV2 / ResNet-18, how the weight-reuse factor
+rho moves the LP-MRAM-only crossover (DESIGN.md SS.2 modeling note), and
+how the ``gpu-pool`` substrate's LP-pool frequency scale (``lp_clock``,
+DESIGN.md SS.5) traces the paper's energy-vs-latency frontier on the GPU
+backend: a slower LP pool stretches the achievable per-task latency while
+the relaxed-deadline energy drops.
 
 Run:  PYTHONPATH=src python examples/placement_sweep.py
 """
@@ -28,6 +33,26 @@ def sweep(model: sp.ModelSpec, rho: float) -> None:
                   f"E_task {e.e_task_pj*1e-6:9.1f} uJ  {share}")
 
 
+def dvfs_frontier(clocks=(0.3, 0.45, 0.6, 0.8, 1.0),
+                  tokens_per_task: int = 2) -> None:
+    """Energy-vs-latency frontier of the gpu-pool substrate over its DVFS
+    knob: per LP-pool frequency scale, the peak (min-latency) point and
+    the relaxed-deadline (min-energy) LUT entry."""
+    print("== gpu-pool DVFS frontier (LP-pool frequency scale lp_clock) ==")
+    for clock in clocks:
+        sub = api.substrate("gpu-pool", lp_clock=clock,
+                            tokens_per_task=tokens_per_task)
+        model = sub.model_spec()
+        T = sub.default_t_slice_ns(model)
+        lut = sub.build_lut(model, t_slice_ns=T, n_points=24)
+        feasible = [e for e in lut.entries if e.feasible]
+        peak, relaxed = feasible[0], feasible[-1]
+        print(f"   lp_clock {clock:4.2f}  t_peak {peak.t_task_ns:8.2f} ns  "
+              f"E_peak {peak.e_task_pj:10.1f} pJ  "
+              f"E_relaxed {relaxed.e_task_pj:10.1f} pJ  "
+              f"T {T/1e3:7.2f} us")
+
+
 def main() -> None:
     for model in sp.TINYML_MODELS.values():
         sweep(model, rho=4.0)
@@ -37,6 +62,7 @@ def main() -> None:
     for rho in (1.0, 2.0, 4.0, 16.0):
         sweep(sp.EFFICIENTNET_B0, rho)
         print()
+    dvfs_frontier()
 
 
 if __name__ == "__main__":

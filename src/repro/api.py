@@ -10,6 +10,7 @@ and solvers are string-keyed registries (DESIGN.md SS.5):
     sched = api.scheduler("edge-hhpim", "efficientnet_b0", rho=4.0)
     sched = api.scheduler("edge-hybrid", model)        # fixed Table I policy
     sched = api.scheduler("tpu-pool", cfg, solver="dp")
+    sched = api.scheduler("gpu-pool", cfg, lp_clock=0.6)  # DVFS knob
     lut   = api.lut("edge-hhpim", model, t_slice_ns=T)
     eng   = api.engine("tpu-pool", cfg, params, max_batch=4)
     fl    = api.fleet("tpu-pool-mixed", n_engines=4, forecaster="holt")
@@ -29,13 +30,14 @@ from repro.core.solvers import (SOLVERS, FixedPolicySolver,  # noqa: F401
                                 PlacementSolver, make_solver,
                                 register_solver)
 from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
-                                  available_substrates, make_substrate,
-                                  register_substrate)
+                                  available_substrates, list_substrates,
+                                  make_substrate, register_substrate)
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
+    "list_substrates",
 ]
 
 

@@ -397,7 +397,8 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
                     entries.append(_fallback_entry(t_c, window))
                 else:
                     entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
-        entries = _insert_entry(entries, _peak_entry(em))
+        entries = _insert_entry(entries, _peak_entry(
+            em, None if static_window == "t_constraint" else t_slice_ns))
         return PlacementLUT(arch.name, model.name, entries)
 
     if method != "dp":
@@ -405,7 +406,19 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
 
     # -- verbatim Algorithm 1 + 2 path ------------------------------------
     tick_ns = t_slice_ns / 2048.0
-    T = 2048
+    # The DP ceils each item's time to whole ticks, so an item spanning
+    # ~1 tick is inflated by up to 100% and the DP turns conservative.
+    # Edge archs put a weight group at tens of ticks; the serving pools
+    # (HBM-resident weights, sub-ns per-weight times) do not - refine the
+    # tick until the smallest item spans >= 8 ticks (<= 12.5% inflation),
+    # capped so the O(n*T*K) tables stay affordable.
+    min_item_ns = min((em.weight_time_ns(s) * group
+                       for c in arch.clusters for s in c.spaces
+                       if em.weight_time_ns(s) > 0), default=0.0)
+    if min_item_ns and min_item_ns / tick_ns < 8:
+        tick_ns = min_item_ns / 8
+    T = min(int(math.ceil(t_slice_ns / tick_ns)), 16384)
+    tick_ns = t_slice_ns / T
     tables = {}
     t_items_by_cluster = {}
     for c in arch.clusters:
@@ -457,5 +470,6 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
                 entries.append(_fallback_entry(t_c, window))
             else:
                 entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
-    entries = _insert_entry(entries, _peak_entry(em))
+    entries = _insert_entry(entries, _peak_entry(
+        em, None if static_window == "t_constraint" else t_slice_ns))
     return PlacementLUT(arch.name, model.name, entries)

@@ -92,7 +92,9 @@ class TimeSliceScheduler:
                     lut=lut, initial_placement=initial_placement,
                     lut_points=(substrate.lut_points if lut_points is None
                                 else lut_points),
-                    solver=sol)
+                    solver=sol,
+                    static_window=getattr(substrate, "static_window",
+                                          "t_constraint"))
         return self
 
     def _setup(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
@@ -100,12 +102,14 @@ class TimeSliceScheduler:
                lut: Optional[PlacementLUT],
                initial_placement: Optional[Placement],
                lut_points: int,
-               solver: Optional[PlacementSolver] = None) -> None:
+               solver: Optional[PlacementSolver] = None,
+               static_window: str = "t_constraint") -> None:
         self.arch = arch
         self.model = model
         self.t_slice_ns = float(t_slice_ns)
         self.rho = rho
         self.lut_points = lut_points
+        self.static_window = static_window
         self.solver = solver if solver is not None \
             else make_solver("closed-form")
         self.em = EnergyModel(arch, model, rho=rho)
@@ -146,7 +150,8 @@ class TimeSliceScheduler:
         if key not in self._lut_cache:
             self._lut_cache[key] = self.solver.build_lut(
                 self.em, t_slice_ns=self.t_slice_ns,
-                n_points=self.lut_points)
+                n_points=self.lut_points,
+                static_window=self.static_window)
         return self._lut_cache[key]
 
     # -- one slice ----------------------------------------------------------

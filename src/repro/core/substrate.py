@@ -17,6 +17,9 @@ one) - behind a string-keyed registry:
   ``edge-baseline``  Baseline-PIM, fixed all-SRAM policy
   ``tpu-pool``       HP/LP TPU chip pools x {bf16, int8} residency
   ``tpu-pool-mixed`` same, heterogeneous fleet shapes (odd engines half)
+  ``gpu-pool``       HP/LP GPU SM-cluster pools at two DVFS points x
+                     {bf16, fp8/int8} HBM residency (``lp_clock`` knob)
+  ``gpu-pool-mixed`` same, heterogeneous fleet shapes (odd engines half)
   ================== ==================================================
 
 Adding a backend is one :func:`register_substrate` call (DESIGN.md SS.5);
@@ -45,6 +48,10 @@ class Substrate:
     # True when the substrate can drive a functional serve engine
     # (api.engine / api.fleet(decode=True)); accounting-only otherwise
     supports_decode = False
+    # window the LUT charges volatile-residency static energy over:
+    # "t_constraint" (paper's per-task accounting) or "t_slice" (serving
+    # pools with a pinned slice length - see GPUPoolSubstrate)
+    static_window = "t_constraint"
 
     # -- workload mapping --------------------------------------------------
     def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
@@ -73,7 +80,8 @@ class Substrate:
             t_slice_ns = self.default_t_slice_ns(em.model, rho=rho)
         return make_solver(solver or self.solver).build_lut(
             em, t_slice_ns=t_slice_ns,
-            n_points=self.lut_points if n_points is None else n_points)
+            n_points=self.lut_points if n_points is None else n_points,
+            static_window=self.static_window)
 
     # -- functional placement ----------------------------------------------
     def apply_placement(self, placement: Placement, sink=None) -> bool:
@@ -137,30 +145,16 @@ class EdgeSubstrate(Substrate):
         return t_peak * workloads.PEAK_TASKS * headroom
 
 
-@dataclasses.dataclass(frozen=True)
-class TPUPoolSubstrate(Substrate):
-    """HP/LP TPU chip pools with {bf16, int8} weight residency as the
-    storage spaces (DESIGN.md SS.3). ``mixed=True`` makes
-    :meth:`engine_variant` give odd-indexed fleet engines half the chips
-    (the heterogeneous-pool serving scenario)."""
+class ServePoolSubstrate(Substrate):
+    """Shared protocol of the serving pool substrates (``tpu-pool``,
+    ``gpu-pool``): an HP and an LP compute pool with per-precision HBM
+    weight residency as the storage spaces, decoded through a functional
+    ``HeteroServeEngine`` (DESIGN.md SS.3/SS.5). Subclasses supply the
+    pool fields, the arch builder and the mixed-fleet shaping; workload
+    mapping (serving ModelConfig -> task spec), slice sizing and
+    functional placement application are identical across pools."""
 
     supports_decode = True
-
-    name: str = "tpu-pool"
-    n_hp_chips: int = 4
-    n_lp_chips: int = 4
-    tokens_per_task: int = 8
-    rho: float = 64.0
-    solver: str = "closed-form"
-    lut_points: int = 32
-    peak_tasks: int = workloads.PEAK_TASKS
-    mixed: bool = False
-    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
-
-    def __post_init__(self):
-        from repro.serve.hetero import tpu_arch
-        object.__setattr__(self, "arch",
-                           tpu_arch(self.n_hp_chips, self.n_lp_chips))
 
     def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
         if isinstance(workload, sp.ModelSpec):
@@ -187,6 +181,30 @@ class TPUPoolSubstrate(Substrate):
             return False
         return sink.apply_placement(placement)
 
+
+@dataclasses.dataclass(frozen=True)
+class TPUPoolSubstrate(ServePoolSubstrate):
+    """HP/LP TPU chip pools with {bf16, int8} weight residency as the
+    storage spaces (DESIGN.md SS.3). ``mixed=True`` makes
+    :meth:`engine_variant` give odd-indexed fleet engines half the chips
+    (the heterogeneous-pool serving scenario)."""
+
+    name: str = "tpu-pool"
+    n_hp_chips: int = 4
+    n_lp_chips: int = 4
+    tokens_per_task: int = 8
+    rho: float = 64.0
+    solver: str = "closed-form"
+    lut_points: int = 32
+    peak_tasks: int = workloads.PEAK_TASKS
+    mixed: bool = False
+    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
+
+    def __post_init__(self):
+        from repro.serve.hetero import tpu_arch
+        object.__setattr__(self, "arch",
+                           tpu_arch(self.n_hp_chips, self.n_lp_chips))
+
     def chip_plan(self, index: int) -> Tuple[int, int]:
         if self.mixed and index % 2 == 1:
             return (max(self.n_hp_chips // 2, 1),
@@ -202,6 +220,64 @@ class TPUPoolSubstrate(Substrate):
 
     def variant_key(self) -> tuple:
         return (self.name, self.n_hp_chips, self.n_lp_chips)
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUPoolSubstrate(ServePoolSubstrate):
+    """HP/LP GPU SM-cluster pools at two DVFS operating points with
+    {bf16, fp8/int8} HBM residency as the storage spaces (DESIGN.md SS.5,
+    constants in :mod:`repro.serve.gpu`).
+
+    ``lp_clock`` is the DVFS sweep knob: the LP pool's frequency scale in
+    (0, 1]. Lowering it stretches LP per-op latency as ``1/lp_clock`` and
+    shrinks LP dynamic/static energy as ``dvfs_energy_scale(lp_clock)``,
+    so sweeping it traces the energy-vs-latency frontier on this backend
+    (``examples/placement_sweep.py``). ``mixed=True`` gives odd-indexed
+    fleet engines half the SM clusters of each pool.
+
+    The LUT charges volatile (bf16) residency statics over the full slice
+    (``static_window="t_slice"``): a serving pool runs a pinned slice
+    length, so a pool holding bf16 shards stays at its operating point for
+    all of ``T`` regardless of the per-task constraint. This also keeps
+    the LUT's ranking consistent with realized slice energy, which the
+    dp/closed-form agreement check relies on."""
+
+    static_window = "t_slice"
+
+    name: str = "gpu-pool"
+    n_hp_clusters: int = 8
+    n_lp_clusters: int = 8
+    lp_clock: float = 0.45          # repro.serve.gpu.LP_CLOCK
+    tokens_per_task: int = 8
+    rho: float = 64.0
+    solver: str = "closed-form"
+    lut_points: int = 32
+    peak_tasks: int = workloads.PEAK_TASKS
+    mixed: bool = False
+    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
+
+    def __post_init__(self):
+        from repro.serve.gpu import gpu_arch
+        object.__setattr__(self, "arch",
+                           gpu_arch(self.n_hp_clusters, self.n_lp_clusters,
+                                    lp_clock=self.lp_clock))
+
+    def cluster_plan(self, index: int) -> Tuple[int, int]:
+        if self.mixed and index % 2 == 1:
+            return (max(self.n_hp_clusters // 2, 1),
+                    max(self.n_lp_clusters // 2, 1))
+        return (self.n_hp_clusters, self.n_lp_clusters)
+
+    def engine_variant(self, index: int) -> "GPUPoolSubstrate":
+        hp, lp = self.cluster_plan(index)
+        if (hp, lp) == (self.n_hp_clusters, self.n_lp_clusters):
+            return self
+        return dataclasses.replace(self, n_hp_clusters=hp,
+                                   n_lp_clusters=lp, mixed=False)
+
+    def variant_key(self) -> tuple:
+        return (self.name, self.n_hp_clusters, self.n_lp_clusters,
+                round(self.lp_clock, 4))
 
 
 # ---------------------------------------------------------------------------
@@ -232,6 +308,13 @@ def available_substrates() -> Tuple[str, ...]:
     return tuple(sorted(SUBSTRATES))
 
 
+def list_substrates() -> Tuple[str, ...]:
+    """Every registered substrate name, sorted. The CI substrate-smoke
+    job iterates this and runs LUT build + one scheduler slice per entry,
+    so a broken registry entry fails CI."""
+    return available_substrates()
+
+
 def _edge_factory(name: str, arch_builder: Callable[..., sp.PIMArch],
                   solver: str) -> SubstrateFactory:
     def factory(*, rho: float = 1.0, solver: str = solver,
@@ -259,6 +342,15 @@ register_substrate("edge-hybrid",
 register_substrate("edge-baseline",
                    _edge_factory("edge-baseline", sp.baseline_pim,
                                  "fixed-baseline"))
+def _gpu_factory(name: str, mixed: bool) -> SubstrateFactory:
+    def factory(**kw) -> GPUPoolSubstrate:
+        return GPUPoolSubstrate(name=name, mixed=mixed, **kw)
+    return factory
+
+
 register_substrate("tpu-pool", _tpu_factory("tpu-pool", mixed=False))
 register_substrate("tpu-pool-mixed",
                    _tpu_factory("tpu-pool-mixed", mixed=True))
+register_substrate("gpu-pool", _gpu_factory("gpu-pool", mixed=False))
+register_substrate("gpu-pool-mixed",
+                   _gpu_factory("gpu-pool-mixed", mixed=True))

@@ -175,7 +175,8 @@ def lower_cell(arch: str, shape: str, mesh, *, microbatches: int = 8):
 
 
 def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
-             force: bool = False, substrate: str = "tpu-pool") -> dict:
+             force: bool = False,
+             substrate: str = "tpu-pool,gpu-pool") -> dict:
     tag = f"{arch}__{shape}__{mesh_kind}"
     out_file = out_dir / f"{tag}.json"
     if out_file.exists() and not force:
@@ -187,7 +188,11 @@ def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
         lowered, meta = lower_cell(arch, shape, mesh)
         rec.update(meta)
         if substrate and substrate != "none" and meta.get("kind") == "decode":
-            rec["substrate"] = _substrate_summary(get_config(arch), substrate)
+            summaries = [_substrate_summary(get_config(arch), s)
+                         for s in substrate.split(",") if s]
+            # single-substrate key kept for older result readers
+            rec["substrate"] = summaries[0]
+            rec["substrates"] = summaries
         if lowered is None:
             rec["status"] = "skipped"
         else:
@@ -215,9 +220,11 @@ def main() -> None:
     ap.add_argument("--mesh", default="single,multi")
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
-    ap.add_argument("--substrate", default="tpu-pool",
-                    help="serving substrate to sanity-check per decode "
-                         "cell ('none' to skip)")
+    ap.add_argument("--substrate", default="tpu-pool,gpu-pool",
+                    help="comma-separated serving substrates to sanity-"
+                         "check per decode cell ('none' to skip): each "
+                         "must map the arch config to a model spec and "
+                         "yield a feasible placement LUT")
     args = ap.parse_args()
 
     archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")

@@ -5,6 +5,7 @@ Runs a trace-driven multi-engine serving fleet: N HH-PIM serve engines
 weight migration, SLO-aware routing with optional admission control.
 
     python -m repro.launch.fleet --trace mmpp --engines 2 --requests 32
+    python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...
 
 With ``--decode`` (default) every worker carries a real
 ``HeteroServeEngine``: each slice's placement is applied as an actual
@@ -47,6 +48,9 @@ def main(argv=None) -> None:
                     help=f"placement solver, one of {sorted(api.SOLVERS)}")
     ap.add_argument("--mixed", action="store_true",
                     help="heterogeneous pool: odd engines get half chips")
+    ap.add_argument("--dvfs", type=float, default=None, metavar="SCALE",
+                    help="LP-pool DVFS frequency scale in (0, 1] "
+                         "(gpu-pool substrates only)")
     ap.add_argument("--tokens-per-task", type=int, default=2)
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--seed", type=int, default=0)
@@ -62,12 +66,21 @@ def main(argv=None) -> None:
     if args.requests is not None:
         trace = trace.truncated(args.requests)
 
-    if args.substrate and args.mixed and args.substrate != "tpu-pool-mixed":
+    if args.substrate and args.mixed \
+            and not args.substrate.endswith("-mixed"):
         raise SystemExit(
             f"--mixed conflicts with --substrate {args.substrate}; "
-            f"use --substrate tpu-pool-mixed (or drop --mixed)")
+            f"use a *-mixed substrate such as tpu-pool-mixed or "
+            f"gpu-pool-mixed (or drop --mixed)")
     substrate = args.substrate or ("tpu-pool-mixed" if args.mixed
                                    else "tpu-pool")
+    over = {"solver": args.solver} if args.solver else {}
+    if args.dvfs is not None:
+        if not substrate.startswith("gpu-pool"):
+            raise SystemExit(f"--dvfs sets the LP-pool frequency scale of "
+                             f"the gpu-pool substrates; it does not apply "
+                             f"to --substrate {substrate}")
+        over["lp_clock"] = args.dvfs
     if args.decode and not api.substrate(substrate).supports_decode:
         print(f"substrate {substrate} is accounting-only (no functional "
               f"decode engine); running as --no-decode")
@@ -83,7 +96,6 @@ def main(argv=None) -> None:
         print(f"arch={canonical(args.arch)} ({cfg.n_layers}L "
               f"d={cfg.d_model}, reduced config)")
 
-    over = {"solver": args.solver} if args.solver else {}
     fleet = api.fleet(
         substrate, cfg, n_engines=args.engines, forecaster=args.forecaster,
         policy=args.policy, tokens_per_task=args.tokens_per_task,

@@ -16,6 +16,7 @@ RHO = 4.0
 EDGE_SUBSTRATES = ("edge-hhpim", "edge-hetero", "edge-hybrid",
                    "edge-baseline")
 TPU_SUBSTRATES = ("tpu-pool", "tpu-pool-mixed")
+GPU_SUBSTRATES = ("gpu-pool", "gpu-pool-mixed")
 FIXED_SOLVERS = ("fixed-baseline", "fixed-hetero", "fixed-hybrid")
 
 
@@ -29,12 +30,20 @@ def _legacy(arch, model, T, **kw):
 
 
 def test_registries_cover_issue_contract():
-    assert set(api.SUBSTRATES) >= set(EDGE_SUBSTRATES) | set(TPU_SUBSTRATES)
+    assert set(api.SUBSTRATES) >= (set(EDGE_SUBSTRATES)
+                                   | set(TPU_SUBSTRATES)
+                                   | set(GPU_SUBSTRATES))
     assert set(api.SOLVERS) >= {"dp", "closed-form", *FIXED_SOLVERS}
     with pytest.raises(ValueError):
         api.substrate("edge-nope")
     with pytest.raises(ValueError):
         api.solver("simulated-annealing")
+
+
+def test_list_substrates_matches_registry():
+    names = api.list_substrates()
+    assert names == tuple(sorted(api.SUBSTRATES))
+    assert set(GPU_SUBSTRATES) <= set(names)
 
 
 @pytest.mark.parametrize("name", EDGE_SUBSTRATES)
@@ -94,6 +103,90 @@ def test_tpu_pool_lut_and_reports_match_legacy():
     assert legacy.lut.entries == new.lut.entries
     assert [legacy.step(n) for n in (4, 1, 8)] == \
         [new.step(n) for n in (4, 1, 8)]
+
+
+def test_gpu_pool_lut_matches_direct_substrate_build():
+    """The facade path and a hand-held GPUPoolSubstrate agree bit-for-bit
+    (the gpu analogue of the tpu legacy-equivalence test; the legacy
+    keyword constructor cannot express the pool's t_slice static window,
+    so the substrate build is the reference)."""
+    from repro.configs import get_smoke_config
+    from repro.serve.gpu import gpu_arch
+    cfg = get_smoke_config("internlm2_1_8b")
+    sub = api.substrate("gpu-pool", tokens_per_task=2)
+    assert sub.arch.name == gpu_arch().name
+    model = sub.model_spec(cfg)
+    T = sub.default_t_slice_ns(model)
+    lut = sub.build_lut(model, t_slice_ns=T, n_points=32)
+    sched = api.scheduler("gpu-pool", cfg, tokens_per_task=2,
+                          lut_points=32)
+    assert sched.t_slice_ns == pytest.approx(T, rel=0, abs=0)
+    assert sched.lut.entries == lut.entries          # byte-identical LUT
+    reports = [sched.step(n) for n in (4, 1, 8)]
+    assert all(r.energy_pj > 0 for r in reports)
+    assert reports[0].n_tasks == 4
+
+
+def test_gpu_pool_dvfs_knob_reaches_factory_and_variants():
+    sub = api.substrate("gpu-pool", n_hp_clusters=2, n_lp_clusters=6,
+                        lp_clock=0.8)
+    assert sub.arch.cluster("hp").n_modules == 2
+    assert sub.arch.cluster("lp").n_modules == 6
+    assert sub.lp_clock == 0.8
+    small = api.substrate("gpu-pool-mixed").engine_variant(1)
+    assert small.n_hp_clusters == 4 and small.n_lp_clusters == 4
+    # lp_clock is part of the LUT-sharing key: engines at different DVFS
+    # points must not share a LUT
+    assert (api.substrate("gpu-pool", lp_clock=0.3).variant_key()
+            != api.substrate("gpu-pool", lp_clock=0.9).variant_key())
+
+
+def test_gpu_pool_dp_and_closed_form_agree():
+    """Acceptance: the verbatim Algorithm 1+2 DP and the closed-form
+    solver agree on the gpu-pool backend within the solver-agreement
+    tolerance, with identical deadline behaviour."""
+    sub = api.substrate("gpu-pool", tokens_per_task=2)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    for scen in ("case3_periodic_spike", "case6_random"):
+        loads = workloads.SCENARIOS[scen]
+        res = {}
+        for solver in ("closed-form", "dp"):
+            sched = api.scheduler(sub, model, t_slice_ns=T, lut_points=24,
+                                  solver=solver)
+            reports = sched.run(loads)
+            res[solver] = (sum(r.energy_pj for r in reports),
+                           sum(not r.deadline_met for r in reports))
+        cf, dp = res["closed-form"], res["dp"]
+        assert dp[1] == cf[1], scen
+        assert dp[0] == pytest.approx(cf[0], rel=0.10), scen
+
+
+def test_gpu_pool_dvfs_scale_is_monotone():
+    """DVFS property: raising the LP-pool frequency scale strictly
+    shortens LP per-op latency and strictly raises LP per-op energy
+    (V^2 at the frequency-matched voltage); the HP pool is untouched and
+    the substrate's peak latency improves monotonically."""
+    clocks = (0.3, 0.45, 0.6, 0.8, 1.0)
+    subs = [api.substrate("gpu-pool", lp_clock=c, tokens_per_task=2)
+            for c in clocks]
+    model = subs[0].model_spec()
+    for kind in ("sram", "mram"):
+        t = [s.arch.cluster("lp").space(kind).op_ns(s.rho) for s in subs]
+        e = [s.arch.cluster("lp").space(kind).op_pj(s.rho) for s in subs]
+        assert all(a > b for a, b in zip(t, t[1:])), (kind, t)
+        assert all(a < b for a, b in zip(e, e[1:])), (kind, e)
+        t_hp = [s.arch.cluster("hp").space(kind).op_ns(s.rho) for s in subs]
+        assert len(set(t_hp)) == 1
+    t_peak = []
+    for s in subs:
+        em = s.energy_model(model)
+        t_peak.append(em.task_cost(em.peak_placement(True)).t_task_ns)
+    assert all(a > b for a, b in zip(t_peak, t_peak[1:])), t_peak
+    with pytest.raises(ValueError):
+        api.substrate("gpu-pool", lp_clock=0.0)
+    with pytest.raises(ValueError):
+        api.substrate("gpu-pool", lp_clock=1.5)
 
 
 def test_fixed_substrates_match_legacy_policies():

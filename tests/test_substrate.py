@@ -1,4 +1,6 @@
-"""Substrate tests: data, quant, optimizers, compression, checkpointing.
+"""Substrate tests: the hardware-substrate registry (every registered
+backend must build a LUT and schedule a slice), plus data, quant,
+optimizers, compression, checkpointing.
 
 hypothesis is an optional dependency: without it only the property-based
 tests are skipped; the deterministic tests below still run.
@@ -10,12 +12,44 @@ import pytest
 
 from conftest import given, settings, st
 
+from repro import api
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.optim.adamw import OptimizerConfig, make_optimizer
 from repro.optim.compression import (compress_with_feedback,
                                      init_error_state)
 from repro.quant.int8 import (dequantize, fake_quant, quantize_activations,
                               quantize_per_channel)
+
+
+# -- substrate registry ------------------------------------------------------
+# The in-repo mirror of the CI substrate-smoke job: every registered name
+# (including gpu-pool/gpu-pool-mixed) must resolve a default workload,
+# build a LUT with at least one feasible entry through its default solver,
+# and run one scheduler slice with positive energy.
+
+
+@pytest.mark.parametrize("name", api.list_substrates())
+def test_registered_substrate_builds_lut_and_schedules(name):
+    sub = api.substrate(name)
+    model = sub.model_spec()
+    t_slice_ns = sub.default_t_slice_ns(model)
+    lut = sub.build_lut(model, t_slice_ns=t_slice_ns, n_points=6)
+    assert any(e.feasible for e in lut.entries), name
+    sched = api.scheduler(sub, model, t_slice_ns=t_slice_ns, lut_points=6)
+    rep = sched.step(2)
+    assert rep.n_tasks == 2 and rep.energy_pj > 0, name
+
+
+@pytest.mark.parametrize("name", ("gpu-pool", "gpu-pool-mixed"))
+def test_gpu_substrates_build_and_solve_with_dp(name):
+    sub = api.substrate(name, tokens_per_task=2)
+    model = sub.model_spec()
+    t_slice_ns = sub.default_t_slice_ns(model)
+    lut = sub.build_lut(model, t_slice_ns=t_slice_ns, n_points=6,
+                        solver="dp")
+    assert any(e.feasible for e in lut.entries), name
+    entry = lut.lookup(t_slice_ns)
+    assert sum(entry.placement.values()) == model.n_params
 
 
 # -- data --------------------------------------------------------------------
