@@ -23,14 +23,16 @@ from pathlib import Path
 
 from benchmarks import paper_tables
 
-# cheap-enough-for-every-PR subset: the per-space constants table plus the
-# two solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools)
-QUICK = ("table5_power", "solver_agreement", "pool_substrates")
+# cheap-enough-for-every-PR subset: the per-space constants table, the
+# two solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools) and
+# the placement-compiler throughput suite
+QUICK = ("table5_power", "solver_agreement", "pool_substrates", "lut_build")
 
 # name -> (flag inside the table's derived dict that must be true)
 GATES = {
     "solver_agreement": "agreement_ok",
     "pool_substrates": "gpu_solver_agreement_ok",
+    "lut_build": "speedup_ok",
 }
 
 

@@ -15,16 +15,25 @@ and solvers are string-keyed registries (DESIGN.md SS.5):
     eng   = api.engine("tpu-pool", cfg, params, max_batch=4)
     fl    = api.fleet("tpu-pool-mixed", n_engines=4, forecaster="holt")
 
+    pc = api.compiler()                  # batched LUT build service
+    fl = api.fleet("gpu-pool-mixed", n_engines=8, compiler=pc)
+    pc.stats()                           # {"entries": 2, "builds": 2, ...}
+
 Adding a backend = one ``register_substrate`` entry; adding a placement
-strategy = one ``register_solver`` entry. Legacy constructors
-(``TimeSliceScheduler(arch, model, ...)``, ``make_baseline_scheduler``,
-``build_fleet``) remain as one-release deprecation shims over this
-module.
+strategy = one ``register_solver`` entry. The
+:class:`~repro.core.compiler.PlacementCompiler` (DESIGN.md SS.6) is the
+batched LUT build service: fleets compile all distinct (substrate
+variant, model shape, slowdown) keys in one pass and schedulers route
+straggler-rescaling rebuilds through its shared cache. Legacy
+constructors (``TimeSliceScheduler(arch, model, ...)``,
+``make_baseline_scheduler``, ``build_fleet``) remain as one-release
+deprecation shims over this module.
 """
 from __future__ import annotations
 
 from typing import Optional, Union
 
+from repro.core.compiler import PlacementCompiler
 from repro.core.scheduler import FixedPlacementScheduler, TimeSliceScheduler
 from repro.core.solvers import (SOLVERS, FixedPolicySolver,  # noqa: F401
                                 PlacementSolver, make_solver,
@@ -35,10 +44,18 @@ from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
+    "compiler", "PlacementCompiler",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
     "list_substrates",
 ]
+
+
+def compiler() -> PlacementCompiler:
+    """A fresh :class:`~repro.core.compiler.PlacementCompiler` - the
+    batched LUT build service. Pass the same instance to several
+    ``scheduler``/``engine``/``fleet`` calls to share one build cache."""
+    return PlacementCompiler()
 
 
 def substrate(name: Union[str, Substrate], **over) -> Substrate:
@@ -54,19 +71,21 @@ def solver(name: Union[str, PlacementSolver]) -> PlacementSolver:
 
 def lut(sub: Union[str, Substrate], workload=None, *, solver=None,
         t_slice_ns: Optional[float] = None, n_points: Optional[int] = None,
-        rho: Optional[float] = None, **over):
+        rho: Optional[float] = None,
+        compiler: Optional[PlacementCompiler] = None, **over):
     """Build a :class:`~repro.core.placement.PlacementLUT` for a substrate
-    workload through its (or the named) solver."""
+    workload through its (or the named) solver; an explicit ``compiler``
+    routes the build through its shared cache."""
     return substrate(sub, **over).build_lut(
         workload, solver=solver, t_slice_ns=t_slice_ns, n_points=n_points,
-        rho=rho)
+        rho=rho, compiler=compiler)
 
 
 def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
               t_slice_ns: Optional[float] = None,
               rho: Optional[float] = None, lut=None,
               lut_points: Optional[int] = None, initial_placement=None,
-              **over):
+              compiler: Optional[PlacementCompiler] = None, **over):
     """Construct the per-slice runtime for a substrate workload.
 
     Dynamic solvers (``closed-form``/``dp``) yield a
@@ -74,6 +93,7 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
     ``fixed-*`` solvers yield a
     :class:`~repro.core.scheduler.FixedPlacementScheduler` (the Table I
     comparison-group semantics: no migration, no movement accounting).
+    A shared ``compiler`` lets several schedulers reuse one LUT cache.
     """
     s = substrate(sub, **over)
     model = s.model_spec(workload)
@@ -88,12 +108,14 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
             placement=sol.initial_placement(em), rho=rho)
     return TimeSliceScheduler.from_substrate(
         s, model, t_slice_ns=t_slice_ns, rho=rho, solver=sol, lut=lut,
-        initial_placement=initial_placement, lut_points=lut_points)
+        initial_placement=initial_placement, lut_points=lut_points,
+        compiler=compiler)
 
 
 def engine(sub: Union[str, Substrate] = "tpu-pool", cfg=None, params=None,
            *, t_slice_ms: Optional[float] = None, max_batch: int = 16,
-           seed: int = 0, **over):
+           seed: int = 0, lut_points: Optional[int] = None,
+           compiler: Optional[PlacementCompiler] = None, **over):
     """Construct a functional serve engine (weights actually re-tiered per
     placement) on a TPU-pool substrate."""
     from repro.serve.hetero import HeteroServeEngine
@@ -104,7 +126,8 @@ def engine(sub: Union[str, Substrate] = "tpu-pool", cfg=None, params=None,
             f"(accounting-only); use a tpu-pool substrate")
     return HeteroServeEngine(cfg, params, substrate=s,
                              t_slice_ms=t_slice_ms, max_batch=max_batch,
-                             seed=seed)
+                             seed=seed, lut_points=lut_points,
+                             compiler=compiler)
 
 
 def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
@@ -115,13 +138,17 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
           admission_limit: Optional[int] = None, slo_slices: float = 2.0,
           forecast_margin: float = 1.0, params=None, decode: bool = False,
           max_batch: int = 16, forecaster_kw: Optional[dict] = None,
-          workload=None, **over):
+          workload=None, compiler: Optional[PlacementCompiler] = None,
+          **over):
     """Construct a fleet of ``n_engines`` serve engines on one substrate.
 
     Engine shapes come from ``substrate.engine_variant(i)`` (the
     ``tpu-pool-mixed`` substrate gives odd engines half the chips);
-    engines with the same shape share one placement LUT. ``decode=True``
-    (TPU substrates, requires ``params``) attaches a real
+    engines with the same shape share one placement LUT, batch-built by
+    a :class:`~repro.core.compiler.PlacementCompiler` (pass one in to
+    share its cache across fleets; the same compiler also serves every
+    worker's straggler-rescaling rebuilds). ``decode=True`` (TPU
+    substrates, requires ``params``) attaches a real
     ``HeteroServeEngine`` per worker so every placement change re-tiers
     actual weights and decodes tokens through them.
     """
@@ -153,10 +180,12 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
                          for v in shapes.values()) / 1e6
     t_slice_ns = t_slice_ms * 1e6
 
-    # one LUT per distinct engine shape, shared by all its instances
-    luts = {key: v.build_lut(model, t_slice_ns=t_slice_ns,
-                             n_points=lut_points, rho=rho)
-            for key, v in shapes.items()}
+    # one LUT per distinct engine shape, batch-built by the placement
+    # compiler (one pass over the deduplicated shapes) and shared by all
+    # instances; the same compiler serves straggler-rescaling rebuilds
+    pc = compiler if compiler is not None else PlacementCompiler()
+    luts = pc.compile(shapes.values(), model, t_slice_ns=t_slice_ns,
+                      n_points=lut_points, rho=rho)
 
     workers = []
     for i, v in enumerate(variants):
@@ -165,14 +194,16 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
             if params is None:
                 raise ValueError("decode=True requires model params")
             eng = engine(v, cfg, params, t_slice_ms=t_slice_ns / 1e6,
-                         max_batch=max_batch)
+                         max_batch=max_batch, lut_points=lut_points,
+                         compiler=pc)
             sched = eng.sched
             sched._lut_cache[sched._slowdown_key()] = luts[v.variant_key()]
             hetero = eng
         else:
             sched = TimeSliceScheduler.from_substrate(
                 v, model, t_slice_ns=t_slice_ns, rho=rho,
-                lut=luts[v.variant_key()], lut_points=lut_points)
+                lut=luts[v.variant_key()], lut_points=lut_points,
+                compiler=pc)
         workers.append(EngineWorker(
             i, sched, make_forecaster(forecaster, **(forecaster_kw or {})),
             hetero=hetero, substrate=v, forecast_margin=forecast_margin))

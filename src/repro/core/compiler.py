@@ -1,0 +1,114 @@
+"""``repro.core.compiler`` - the batched placement compiler (DESIGN.md SS.6).
+
+A :class:`PlacementCompiler` is the fleet-wide LUT build service: it
+deduplicates ``(substrate variant, model shape, solver, slice, slowdown)``
+keys and builds each missing :class:`~repro.core.placement.PlacementLUT`
+exactly once through the batched solver drivers
+(:func:`repro.core.placement.build_lut` with ``batched=True``), caching
+the result. Fleet bring-up compiles every distinct engine shape in one
+pass instead of once per engine, and straggler rescaling (the
+scheduler's per-slowdown-signature LUT rebuild) hits the shared cache,
+so two degraded engines of the same shape pay one rebuild between them.
+
+Construct through ``repro.api.compiler()``; ``api.scheduler``,
+``api.engine`` and ``api.fleet`` accept a ``compiler=`` to share one
+cache across engines, fleets and slices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Tuple, Union
+
+from repro.core.energy import EnergyModel
+from repro.core.placement import PlacementLUT
+from repro.core.solvers import PlacementSolver, make_solver
+
+CacheKey = Tuple
+
+
+def slowdown_signature(time_scale) -> tuple:
+    """Canonical per-cluster slowdown key. The single source of truth
+    for slowdown rounding: the scheduler's per-engine ``_lut_cache`` and
+    this compiler's shared cache both key through it, so the two layers
+    always address the same entry (DESIGN.md SS.6)."""
+    return tuple(sorted((c, round(float(f), 3))
+                        for c, f in dict(time_scale).items()))
+
+
+class PlacementCompiler:
+    """Batch LUT builder with one shared cache across engines and fleets."""
+
+    def __init__(self) -> None:
+        self._cache: Dict[CacheKey, PlacementLUT] = {}
+        self.n_builds = 0          # cache misses -> actual solver runs
+        self.n_hits = 0            # served from cache
+
+    # -- keys ---------------------------------------------------------------
+    @staticmethod
+    def cache_key(*, variant_key: tuple, model, solver_name: str,
+                  t_slice_ns: float, n_points: int, rho: float,
+                  static_window: str, slowdown: tuple) -> CacheKey:
+        return (tuple(variant_key), model.name, int(model.n_params),
+                solver_name, float(t_slice_ns), int(n_points), float(rho),
+                static_window, tuple(slowdown))
+
+    # -- single build -------------------------------------------------------
+    def lut(self, em: EnergyModel, *,
+            solver: Union[str, PlacementSolver],
+            t_slice_ns: float, n_points: int,
+            static_window: str = "t_constraint",
+            variant_key: Optional[tuple] = None) -> PlacementLUT:
+        """Build-or-fetch one LUT. ``em.time_scale`` (straggler slowdown)
+        and ``em.rho`` are part of the key, so a degraded engine gets its
+        own entry while identical engines share one."""
+        sol = make_solver(solver)
+        key = self.cache_key(
+            variant_key=variant_key or (em.arch.name,), model=em.model,
+            solver_name=sol.name, t_slice_ns=t_slice_ns,
+            n_points=n_points, rho=em.rho, static_window=static_window,
+            slowdown=slowdown_signature(em.time_scale))
+        hit = self._cache.get(key)
+        if hit is not None:
+            self.n_hits += 1
+            return hit
+        self.n_builds += 1
+        built = sol.build_lut(em, t_slice_ns=t_slice_ns, n_points=n_points,
+                              static_window=static_window)
+        self._cache[key] = built
+        return built
+
+    # -- fleet bring-up -----------------------------------------------------
+    def compile(self, substrates: Iterable, workload=None, *,
+                solver=None, t_slice_ns: Optional[float] = None,
+                n_points: Optional[int] = None,
+                rho: Optional[float] = None
+                ) -> Dict[tuple, PlacementLUT]:
+        """Batch-build LUTs for every distinct engine shape in one pass.
+
+        ``substrates`` are (possibly repeated) engine variants; shapes
+        are deduplicated on ``variant_key()`` before any build, so N
+        engines of S distinct shapes cost S builds (or fewer, on cache
+        hits from an earlier fleet). Returns ``{variant_key: lut}``.
+        """
+        out: Dict[tuple, PlacementLUT] = {}
+        for sub in substrates:
+            vk = sub.variant_key()
+            if vk in out:
+                continue
+            model = sub.model_spec(workload)
+            r = sub.rho if rho is None else rho
+            em = sub.energy_model(model, rho=r)
+            out[vk] = self.lut(
+                em, solver=solver or sub.solver,
+                t_slice_ns=(sub.default_t_slice_ns(model, rho=r)
+                            if t_slice_ns is None else t_slice_ns),
+                n_points=(sub.lut_points if n_points is None else n_points),
+                static_window=sub.static_window, variant_key=vk)
+        return out
+
+    # -- introspection ------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._cache)
+
+    def stats(self) -> Dict[str, int]:
+        return {"entries": len(self._cache), "builds": self.n_builds,
+                "hits": self.n_hits}

@@ -3,7 +3,13 @@
 Three solvers, cross-validated by the test-suite:
 
   * :func:`dp_min_energy`        - Algorithm 1, verbatim bottom-up DP
-                                   (per-cluster, integer time ticks).
+                                   (per-cluster, integer time ticks). Kept
+                                   as the float64 reference oracle; the
+                                   production ``method="dp"`` path runs
+                                   the :mod:`repro.kernels.knapsack_dp` op
+                                   (pallas / pallas_interpret / ref
+                                   backends) and backtraces over the op's
+                                   returned stage tables.
   * :func:`combine_clusters`     - Algorithm 2, combining the per-cluster
                                    tables over (k_hp, k_lp = K - k_hp).
   * :class:`ClosedFormSolver`    - beyond-paper fast path: because per-space
@@ -13,10 +19,15 @@ Three solvers, cross-validated by the test-suite:
                                    t-point, and able to include the
                                    volatility-aware static terms that the
                                    paper folds into its measured results.
+                                   :meth:`ClosedFormSolver.solve_clusters`
+                                   solves the whole t-grid in one
+                                   numpy-broadcast call (DESIGN.md SS.6).
 
 The LUT (:class:`PlacementLUT`) is built once at application init (paper:
 Algorithms 1+2 "performed only once during the application initialization
-phase") and consulted per time slice.
+phase") and consulted per time slice; :func:`build_lut` defaults to the
+batched drivers, with ``batched=False`` keeping the per-point loop as the
+byte-identical reference path the equivalence suite checks against.
 """
 from __future__ import annotations
 
@@ -39,7 +50,12 @@ INF = float("inf")
 
 def dp_min_energy(t_items: Sequence[int], e_items: Sequence[float],
                   T: int, K: int) -> Tuple[np.ndarray, np.ndarray]:
-    """Bottom-up DP of Eq. (2) / Algorithm 1.
+    """Bottom-up DP of Eq. (2) / Algorithm 1 (float64 reference oracle).
+
+    The production ``build_lut(method="dp")`` path runs the
+    :mod:`repro.kernels.knapsack_dp` op instead; this verbatim numpy
+    implementation remains the cross-check the kernel tests compare
+    against.
 
     Args:
       t_items: integer per-item time cost of each storage space (ticks).
@@ -86,6 +102,35 @@ def backtrace(dp: np.ndarray, count: np.ndarray,
         t -= c * int(t_items[i - 1])
         k -= c
         i -= 1
+    return x
+
+
+def backtrace_tables(stages: np.ndarray, t_items: Sequence[int],
+                     t: int, k: int) -> List[int]:
+    """Recover per-space counts from stacked per-space DP tables.
+
+    ``stages`` is the ``(n+1, T+1, K+1)`` array returned by
+    ``repro.kernels.knapsack_dp.ops.knapsack_dp(..., return_stages=True)``
+    (stage 0 is the k=0 base table). The recurrence is
+    ``dp_i[t, k] = min(dp_{i-1}[t, k], dp_i[t - t_i, k - 1] + e_i)``, so
+    at state ``(i, t, k)`` equality with the previous stage means the
+    carry branch was taken (the carried value is copied bit-identically,
+    so float equality is exact); otherwise one more item sits in space
+    ``i``. Ties prefer the carry branch, matching the ``count`` path
+    variable of the verbatim numpy DP.
+    """
+    n = stages.shape[0] - 1
+    x = [0] * n
+    i = n
+    while k > 0 and i > 0:
+        if stages[i, t, k] == stages[i - 1, t, k]:
+            i -= 1
+            continue
+        x[i - 1] += 1
+        t -= int(t_items[i - 1])
+        k -= 1
+        if t < 0:      # inconsistent table: fail loudly, not silently
+            raise RuntimeError("backtrace walked below t=0")
     return x
 
 
@@ -218,6 +263,105 @@ class ClosedFormSolver:
         best_xm[0] = 0
         return ClusterSolution(best_e, best_xm, best_busy)
 
+    def solve_clusters(self, cluster: sp.ClusterSpec, K: int,
+                       t_budgets_ns: Sequence[float],
+                       static_windows_ns: Sequence[float]
+                       ) -> "BatchedClusterSolution":
+        """Vectorized :meth:`solve_cluster` over a whole t-grid.
+
+        One numpy-broadcast call evaluates every candidate split for all
+        ``P = len(t_budgets_ns)`` budgets at once - the manual vmap of
+        the per-point solver over the constraint axis. All arithmetic is
+        the same float64 elementwise expressions in the same order, so
+        row ``p`` is bit-identical to
+        ``solve_cluster(cluster, K, t_budgets_ns[p], static_windows_ns[p])``
+        (asserted by the batched-vs-loop equivalence suite).
+        """
+        em, g = self.em, self.group
+        mram, sram = self._space_vectors(cluster)
+        t_b = np.asarray(t_budgets_ns, np.float64).reshape(-1, 1)
+        win = np.asarray(static_windows_ns, np.float64).reshape(-1, 1)
+        P = t_b.shape[0]
+        k = np.arange(K + 1, dtype=np.float64)       # in groups
+        K1 = K + 1
+        best_e = np.full((P, K1), INF)
+        best_xm = np.zeros((P, K1), dtype=np.int64)
+        best_busy = np.zeros((P, K1))
+
+        tw_s = em.weight_time_ns(sram) * g
+        ew_s = em.weight_energy_pj(sram) * g
+        cap_s = sram.capacity_weights // g
+        if mram is not None:
+            tw_m = em.weight_time_ns(mram) * g
+            ew_m = em.weight_energy_pj(mram) * g
+            cap_m = mram.capacity_weights // g
+
+        def consider(x_m: np.ndarray) -> None:
+            """Evaluate split (x_m, k - x_m) for every budget row."""
+            x_s = k - x_m                  # (K1,) or (P, K1)
+            valid = (x_m >= 0) & (x_s >= 0) & (x_s <= cap_s)
+            if mram is not None:
+                valid = valid & (x_m <= cap_m)
+            busy = (x_m * (tw_m if mram is not None else 0.0) + x_s * tw_s)
+            valid = valid & (busy <= t_b + 1e-9)
+            e = x_m * (ew_m if mram is not None else 0.0) + x_s * ew_s
+            # statics: SRAM-on-holding for the window; MRAM/IO/PE while busy
+            e = e + np.where(x_s > 0, sram.static_mw_total * win,
+                             sram.static_mw_total * busy)
+            if mram is not None:
+                e = e + np.where(x_m > 0, mram.static_mw_total * busy, 0.0)
+            e = e + cluster.pe_static_mw_total * busy
+            e = np.where(valid, e, INF)
+            upd = e < best_e
+            xb = np.broadcast_to(np.asarray(x_m, np.float64), (P, K1))
+            bb = np.broadcast_to(busy, (P, K1))
+            best_e[upd] = e[upd]
+            best_xm[upd] = xb[upd].astype(np.int64)
+            best_busy[upd] = bb[upd]
+
+        zeros = np.zeros(K + 1)
+        if mram is None:
+            consider(zeros)                          # all in SRAM
+        else:
+            consider(zeros)                          # all SRAM
+            consider(k.copy())                       # all MRAM
+            # mixed: feasible x_m interval endpoints given the time budget.
+            if abs(tw_m - tw_s) < 1e-12:
+                pass                                 # linear in x_m is flat
+            elif tw_m > tw_s:
+                xm_hi = np.floor((t_b - k * tw_s) / (tw_m - tw_s))
+                consider(np.clip(xm_hi, 0, k))
+                consider(np.clip(xm_hi - 1, 0, k))   # guard rounding
+                consider(np.minimum(np.ones(K + 1), k))
+                consider(np.maximum(k - 1, zeros))
+            else:
+                xm_lo = np.ceil((k * tw_s - t_b) / (tw_s - tw_m))
+                consider(np.clip(xm_lo, 0, k))
+                consider(np.clip(xm_lo + 1, 0, k))
+                consider(np.minimum(np.ones(K + 1), k))
+                consider(np.maximum(k - 1, zeros))
+            # capacity endpoints
+            consider(np.minimum(k, float(cap_m)))
+            consider(np.maximum(k - float(cap_s), zeros))
+        best_e[:, 0] = 0.0
+        best_busy[:, 0] = 0.0
+        best_xm[:, 0] = 0
+        return BatchedClusterSolution(best_e, best_xm, best_busy)
+
+
+@dataclasses.dataclass
+class BatchedClusterSolution:
+    """Per-cluster optima for a batch of time budgets; row ``p`` of every
+    array equals the :class:`ClusterSolution` of the p-th budget."""
+
+    energy_pj: np.ndarray      # (P, K+1)
+    x_mram: np.ndarray         # (P, K+1) int64
+    busy_ns: np.ndarray        # (P, K+1)
+
+    def row(self, p: int) -> ClusterSolution:
+        return ClusterSolution(self.energy_pj[p], self.x_mram[p],
+                               self.busy_ns[p])
+
 
 # ---------------------------------------------------------------------------
 # LUT builder (paper: init-time Algorithms 1+2 -> allocation_state)
@@ -292,15 +436,25 @@ def _counts_to_placement(arch: sp.PIMArch, model: sp.ModelSpec,
     return pl
 
 
+# Measured per-cell cost of the BATCHED closed-form build (the lut_build
+# benchmark suite records the current number): one cell = one (t-point,
+# k-group, space) triple. Measured ~200 ns/cell at the default
+# (64 points x 256 groups x 4 spaces) resolution; the per-point loop it
+# replaced measures ~1 us/cell on the same core (the old 25 ns/cell
+# default encoded only the DP inner loop, not the full per-point build,
+# so it overshot the paper's 1% budget by ~40x).
+BATCHED_COST_PER_CELL_NS = 200.0
+
+
 def auto_resolution(model: sp.ModelSpec, t_slice_ns: float, *,
                     budget_fraction: float = 0.01,
-                    cost_per_cell_ns: float = 25.0,
+                    cost_per_cell_ns: float = BATCHED_COST_PER_CELL_NS,
                     n_spaces: int = 4) -> Tuple[int, int]:
     """Paper SS.III.B: limit optimization resolution so the init-time LUT
     build costs at most ``budget_fraction`` of one time slice.
 
-    Algorithm 1 is O(n * T * K); with a measured per-cell cost of
-    ~``cost_per_cell_ns`` (vectorized numpy on the edge-class core), choose
+    The build is O(n * T * K) cells; with the measured per-cell cost of
+    the batched solver (~``cost_per_cell_ns``), choose
     (n_points, k_groups) maximizing resolution within the budget.
 
     Returns (n_points, k_groups).
@@ -308,8 +462,7 @@ def auto_resolution(model: sp.ModelSpec, t_slice_ns: float, *,
     budget_cells = max(t_slice_ns * budget_fraction / cost_per_cell_ns, 64)
     # keep the T:K aspect ratio ~8:1 (time needs finer resolution than
     # group count - placements are piecewise constant in k)
-    import numpy as _np
-    k = int(_np.sqrt(budget_cells / (8.0 * n_spaces)))
+    k = int(np.sqrt(budget_cells / (8.0 * n_spaces)))
     k_groups = int(min(max(k, 8), model.n_params))
     n_points = int(min(max(budget_cells / (n_spaces * k_groups), 8), 512))
     return n_points, k_groups
@@ -319,14 +472,22 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
               t_slice_ns: float, n_points: int = 64, rho: float = 1.0,
               method: str = "closed_form", k_groups: int = 256,
               static_window: str = "t_constraint",
-              em: Optional[EnergyModel] = None) -> PlacementLUT:
+              em: Optional[EnergyModel] = None, batched: bool = True,
+              dp_backend: str = "auto",
+              dp_ticks: int = 2048) -> PlacementLUT:
     """Construct ``allocation_state`` - the init-time placement LUT.
 
     ``method="closed_form"`` uses :class:`ClosedFormSolver` (exact, with
-    statics); ``method="dp"`` runs Algorithms 1+2 verbatim on the dynamic
-    energies and evaluates the resulting placements under the full model.
-    An explicit ``em`` (e.g. with straggler ``time_scale``) overrides the
-    default model.
+    statics); ``method="dp"`` runs Algorithms 1+2 on the dynamic energies
+    through the :mod:`repro.kernels.knapsack_dp` op (``dp_backend``
+    selects auto / pallas / pallas_interpret / ref) and evaluates the
+    resulting placements under the full model.
+
+    ``batched=True`` (default) solves the whole t-grid in one vectorized
+    pass per cluster; ``batched=False`` keeps the per-point loop, which
+    must produce byte-identical LUTs (asserted by the equivalence suite
+    in tests/test_api.py). An explicit ``em`` (e.g. with straggler
+    ``time_scale``) overrides the default model.
     """
     em = em or EnergyModel(arch, model, rho=rho)
     K = model.n_params
@@ -342,61 +503,76 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
     pl_peak = em.peak_placement(sram_only=True)
     tc_peak = em.task_cost(pl_peak)
 
-    def _fallback_entry(t_c: float, window: float) -> LUTEntry:
-        """Grid point infeasible at group granularity but >= the exact peak
-        time: fall back to the exact peak placement."""
-        e_task = tc_peak.e_dyn_task_pj + em.static_energy_pj(
-            pl_peak, window, tc_peak.t_cluster_ns)
-        return LUTEntry(float(t_c), dict(pl_peak), float(e_task),
-                        tc_peak.t_task_ns, True)
+    def _window(t_c: float) -> float:
+        return t_c if static_window == "t_constraint" else t_slice_ns
+
+    def _entry(t_c: float, feasible: bool,
+               counts: Mapping[str, int]) -> LUTEntry:
+        """Finalize one grid point; shared by every solver driver so the
+        batched and per-point paths stay byte-identical past this line."""
+        window = _window(t_c)
+        if feasible:
+            pl = _counts_to_placement(arch, model, counts, group)
+            tc = em.task_cost(pl)
+            e_task = tc.e_dyn_task_pj + em.static_energy_pj(
+                pl, window, tc.t_cluster_ns)
+            return LUTEntry(float(t_c), pl, float(e_task), tc.t_task_ns,
+                            True)
+        if t_c >= tc_peak.t_task_ns:
+            # grid point infeasible at group granularity but >= the exact
+            # peak time: fall back to the exact peak placement
+            e_task = tc_peak.e_dyn_task_pj + em.static_energy_pj(
+                pl_peak, window, tc_peak.t_cluster_ns)
+            return LUTEntry(float(t_c), dict(pl_peak), float(e_task),
+                            tc_peak.t_task_ns, True)
+        return LUTEntry(float(t_c), {}, INF, INF, False)
+
+    def _cf_counts(sols: Mapping[str, ClusterSolution]
+                   ) -> Tuple[bool, Dict[str, int]]:
+        """Combine per-cluster closed-form solutions for one grid point."""
+        if len(arch.clusters) == 2:
+            hp, lp = (sols[c.name] for c in arch.clusters)
+            tot = hp.energy_pj + lp.energy_pj[::-1]
+            k_hp = int(np.argmin(tot))
+            feasible = bool(np.isfinite(tot[k_hp]))
+            counts: Dict[str, int] = {}
+            if feasible:
+                k_lp = Kg - k_hp
+                for cname, ksel in ((arch.clusters[0].name, k_hp),
+                                    (arch.clusters[1].name, k_lp)):
+                    sol = sols[cname]
+                    xm = int(sol.x_mram[ksel])
+                    for s in arch.cluster(cname).spaces:
+                        counts[s.name] = (xm if s.mem.kind == "mram"
+                                          else ksel - xm)
+            return feasible, counts
+        (cname, sol), = sols.items()
+        feasible = bool(np.isfinite(sol.energy_pj[Kg]))
+        counts = {}
+        if feasible:
+            xm = int(sol.x_mram[Kg])
+            for s in arch.cluster(cname).spaces:
+                counts[s.name] = xm if s.mem.kind == "mram" else Kg - xm
+        return feasible, counts
 
     entries: List[LUTEntry] = []
     if method == "closed_form":
         solver = ClosedFormSolver(em, group=group)
-        for t_c in t_grid:
-            window = t_c if static_window == "t_constraint" else t_slice_ns
-            sols = {c.name: solver.solve_cluster(c, Kg, t_c, window)
-                    for c in arch.clusters}
-            if len(arch.clusters) == 2:
-                hp, lp = (sols[c.name] for c in arch.clusters)
-                tot = hp.energy_pj + lp.energy_pj[::-1]
-                k_hp = int(np.argmin(tot))
-                feasible = bool(np.isfinite(tot[k_hp]))
-                counts: Dict[str, int] = {}
-                if feasible:
-                    k_lp = Kg - k_hp
-                    for cname, ksel in ((arch.clusters[0].name, k_hp),
-                                        (arch.clusters[1].name, k_lp)):
-                        sol = sols[cname]
-                        xm = int(sol.x_mram[ksel])
-                        cl = arch.cluster(cname)
-                        for s in cl.spaces:
-                            counts[s.name] = (xm if s.mem.kind == "mram"
-                                              else ksel - xm)
-            else:
-                (cname, sol), = sols.items()
-                feasible = bool(np.isfinite(sol.energy_pj[Kg]))
-                counts = {}
-                if feasible:
-                    xm = int(sol.x_mram[Kg])
-                    cl = arch.cluster(cname)
-                    for s in cl.spaces:
-                        counts[s.name] = (xm if s.mem.kind == "mram"
-                                          else Kg - xm)
-            if feasible:
-                pl = _counts_to_placement(arch, model, counts, group)
-                tc = em.task_cost(pl)
-                window = t_c if static_window == "t_constraint" else t_slice_ns
-                e_task = tc.e_dyn_task_pj + em.static_energy_pj(
-                    pl, window, tc.t_cluster_ns)
-                entries.append(LUTEntry(float(t_c), pl, float(e_task),
-                                        tc.t_task_ns, True))
-            else:
-                window = t_c if static_window == "t_constraint" else t_slice_ns
-                if t_c >= tc_peak.t_task_ns:
-                    entries.append(_fallback_entry(t_c, window))
-                else:
-                    entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
+        if batched:
+            windows = np.asarray([_window(t_c) for t_c in t_grid])
+            batch = {c.name: solver.solve_clusters(c, Kg, t_grid, windows)
+                     for c in arch.clusters}
+            for i, t_c in enumerate(t_grid):
+                sols = {name: b.row(i) for name, b in batch.items()}
+                feasible, counts = _cf_counts(sols)
+                entries.append(_entry(t_c, feasible, counts))
+        else:
+            for t_c in t_grid:
+                sols = {c.name: solver.solve_cluster(c, Kg, t_c,
+                                                     _window(t_c))
+                        for c in arch.clusters}
+                feasible, counts = _cf_counts(sols)
+                entries.append(_entry(t_c, feasible, counts))
         entries = _insert_entry(entries, _peak_entry(
             em, None if static_window == "t_constraint" else t_slice_ns))
         return PlacementLUT(arch.name, model.name, entries)
@@ -404,8 +580,11 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
     if method != "dp":
         raise ValueError(method)
 
-    # -- verbatim Algorithm 1 + 2 path ------------------------------------
-    tick_ns = t_slice_ns / 2048.0
+    # -- Algorithm 1 + 2 path, per-cluster tables via the kernel op --------
+    # (lazy import: the closed-form path stays numpy-only)
+    from repro.kernels.knapsack_dp.ops import knapsack_dp
+
+    tick_ns = t_slice_ns / float(dp_ticks)
     # The DP ceils each item's time to whole ticks, so an item spanning
     # ~1 tick is inflated by up to 100% and the DP turns conservative.
     # Edge archs put a weight group at tens of ticks; the serving pools
@@ -419,7 +598,7 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
         tick_ns = min_item_ns / 8
     T = min(int(math.ceil(t_slice_ns / tick_ns)), 16384)
     tick_ns = t_slice_ns / T
-    tables = {}
+    stage_tables: Dict[str, np.ndarray] = {}
     t_items_by_cluster = {}
     for c in arch.clusters:
         # ceil => DP never underestimates a placement's true execution time
@@ -427,49 +606,57 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
                                         / tick_ns - 1e-9)))
                    for s in c.spaces]
         e_items = [em.weight_energy_pj(s) * group for s in c.spaces]
-        dp, count = dp_min_energy(t_items, e_items, T, Kg)
-        tables[c.name] = (dp, count)
+        stage_tables[c.name] = np.asarray(knapsack_dp(
+            t_items, e_items, T, Kg, backend=dp_backend,
+            return_stages=True))
         t_items_by_cluster[c.name] = t_items
-    for t_c in t_grid:
-        t_ticks = int(t_c / tick_ns)
+
+    def _dp_counts(t_ticks: int, min_e: float,
+                   k_opt: int) -> Tuple[bool, Dict[str, int]]:
+        """Backtrace one grid point over the op's stage tables."""
+        counts: Dict[str, int] = {}
         if len(arch.clusters) == 2:
-            (n0, (dp0, cnt0)), (n1, (dp1, cnt1)) = tables.items()
-            min_e, k_opt = combine_clusters(dp0[-1][t_ticks:t_ticks + 1],
-                                            dp1[-1][t_ticks:t_ticks + 1])
-            feasible = k_opt[0] >= 0 and np.isfinite(min_e[0])
-            counts = {}
+            (n0, st0), (n1, st1) = stage_tables.items()
+            feasible = bool(k_opt >= 0 and np.isfinite(min_e))
             if feasible:
-                k_hp = int(k_opt[0])
-                xs0 = backtrace(dp0, cnt0, t_items_by_cluster[n0], t_ticks,
-                                k_hp)
-                xs1 = backtrace(dp1, cnt1, t_items_by_cluster[n1], t_ticks,
-                                Kg - k_hp)
+                k_hp = int(k_opt)
+                xs0 = backtrace_tables(st0, t_items_by_cluster[n0],
+                                       t_ticks, k_hp)
+                xs1 = backtrace_tables(st1, t_items_by_cluster[n1],
+                                       t_ticks, Kg - k_hp)
                 for cname, xs in ((n0, xs0), (n1, xs1)):
                     for s, x in zip(arch.cluster(cname).spaces, xs):
                         counts[s.name] = x
-        else:
-            (n0, (dp0, cnt0)), = tables.items()
-            feasible = np.isfinite(dp0[-1][t_ticks, Kg])
-            counts = {}
-            if feasible:
-                xs0 = backtrace(dp0, cnt0, t_items_by_cluster[n0], t_ticks,
-                                Kg)
-                for s, x in zip(arch.cluster(n0).spaces, xs0):
-                    counts[s.name] = x
+            return feasible, counts
+        (n0, st0), = stage_tables.items()
+        feasible = bool(np.isfinite(st0[-1][t_ticks, Kg]))
         if feasible:
-            pl = _counts_to_placement(arch, model, counts, group)
-            tc = em.task_cost(pl)
-            window = t_c if static_window == "t_constraint" else t_slice_ns
-            e_task = tc.e_dyn_task_pj + em.static_energy_pj(
-                pl, window, tc.t_cluster_ns)
-            entries.append(LUTEntry(float(t_c), pl, float(e_task),
-                                    tc.t_task_ns, True))
-        else:
-            window = t_c if static_window == "t_constraint" else t_slice_ns
-            if t_c >= tc_peak.t_task_ns:
-                entries.append(_fallback_entry(t_c, window))
+            xs0 = backtrace_tables(st0, t_items_by_cluster[n0], t_ticks, Kg)
+            for s, x in zip(arch.cluster(n0).spaces, xs0):
+                counts[s.name] = x
+        return feasible, counts
+
+    two = len(arch.clusters) == 2
+    if two and batched:
+        # Algorithm 2 over the full tables in one vectorized call; the
+        # per-point path below slices single rows out of the same tables.
+        finals = [st[-1] for st in stage_tables.values()]
+        min_e_all, k_opt_all = combine_clusters(finals[0], finals[1])
+    for t_c in t_grid:
+        t_ticks = int(t_c / tick_ns)
+        if two:
+            if batched:
+                min_e, k_opt = min_e_all[t_ticks], int(k_opt_all[t_ticks])
             else:
-                entries.append(LUTEntry(float(t_c), {}, INF, INF, False))
+                finals = [st[-1] for st in stage_tables.values()]
+                m_e, k_o = combine_clusters(
+                    finals[0][t_ticks:t_ticks + 1],
+                    finals[1][t_ticks:t_ticks + 1])
+                min_e, k_opt = m_e[0], int(k_o[0])
+        else:
+            min_e, k_opt = 0.0, 0       # unused in the 1-cluster branch
+        feasible, counts = _dp_counts(t_ticks, min_e, k_opt)
+        entries.append(_entry(t_c, feasible, counts))
     entries = _insert_entry(entries, _peak_entry(
         em, None if static_window == "t_constraint" else t_slice_ns))
     return PlacementLUT(arch.name, model.name, entries)

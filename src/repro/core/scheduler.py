@@ -17,6 +17,7 @@ import warnings
 from typing import Dict, List, Optional
 
 from repro.core import spaces as sp
+from repro.core.compiler import slowdown_signature
 from repro.core.energy import EnergyModel, Placement
 from repro.core.placement import PlacementLUT
 from repro.core.solvers import PlacementSolver, make_solver
@@ -77,11 +78,14 @@ class TimeSliceScheduler:
                        solver=None,
                        lut: Optional[PlacementLUT] = None,
                        initial_placement: Optional[Placement] = None,
-                       lut_points: Optional[int] = None
-                       ) -> "TimeSliceScheduler":
+                       lut_points: Optional[int] = None,
+                       compiler=None) -> "TimeSliceScheduler":
         """Canonical constructor: resolve everything from a
         :class:`~repro.core.substrate.Substrate` (duck-typed), letting
-        callers override slice length, reuse factor, solver and LUT."""
+        callers override slice length, reuse factor, solver and LUT.
+        A shared :class:`~repro.core.compiler.PlacementCompiler` makes
+        LUT (re)builds - including straggler-rescaling rebuilds - hit a
+        fleet-wide cache instead of this engine's private one."""
         model = substrate.model_spec(workload)
         rho = substrate.rho if rho is None else rho
         if t_slice_ns is None:
@@ -94,7 +98,9 @@ class TimeSliceScheduler:
                                 else lut_points),
                     solver=sol,
                     static_window=getattr(substrate, "static_window",
-                                          "t_constraint"))
+                                          "t_constraint"),
+                    compiler=compiler,
+                    variant_key=substrate.variant_key())
         return self
 
     def _setup(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
@@ -103,13 +109,16 @@ class TimeSliceScheduler:
                initial_placement: Optional[Placement],
                lut_points: int,
                solver: Optional[PlacementSolver] = None,
-               static_window: str = "t_constraint") -> None:
+               static_window: str = "t_constraint",
+               compiler=None, variant_key: Optional[tuple] = None) -> None:
         self.arch = arch
         self.model = model
         self.t_slice_ns = float(t_slice_ns)
         self.rho = rho
         self.lut_points = lut_points
         self.static_window = static_window
+        self.compiler = compiler
+        self.variant_key = variant_key or (arch.name,)
         self.solver = solver if solver is not None \
             else make_solver("closed-form")
         self.em = EnergyModel(arch, model, rho=rho)
@@ -141,17 +150,27 @@ class TimeSliceScheduler:
                               time_scale=self.slowdown)
 
     def _slowdown_key(self) -> tuple:
-        return tuple(sorted((c, round(f, 3))
-                            for c, f in getattr(self, "slowdown", {}).items()))
+        # shared helper: must stay keyed identically to the compiler's
+        # cache for straggler rebuilds to hit the fleet-wide entry
+        return slowdown_signature(getattr(self, "slowdown", {}))
 
     @property
     def lut(self) -> PlacementLUT:
         key = self._slowdown_key()
         if key not in self._lut_cache:
-            self._lut_cache[key] = self.solver.build_lut(
-                self.em, t_slice_ns=self.t_slice_ns,
-                n_points=self.lut_points,
-                static_window=self.static_window)
+            if self.compiler is not None:
+                # fleet-wide build service: engines of the same shape and
+                # slowdown signature share one build
+                self._lut_cache[key] = self.compiler.lut(
+                    self.em, solver=self.solver,
+                    t_slice_ns=self.t_slice_ns, n_points=self.lut_points,
+                    static_window=self.static_window,
+                    variant_key=self.variant_key)
+            else:
+                self._lut_cache[key] = self.solver.build_lut(
+                    self.em, t_slice_ns=self.t_slice_ns,
+                    n_points=self.lut_points,
+                    static_window=self.static_window)
         return self._lut_cache[key]
 
     # -- one slice ----------------------------------------------------------

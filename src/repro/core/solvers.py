@@ -6,8 +6,11 @@ benchmarks and fleets can swap the optimization strategy by name without
 re-threading ``(arch, model, em, ...)`` tuples:
 
   * ``"closed-form"`` - exact per-cluster endpoint solver with statics
-    (:class:`repro.core.placement.ClosedFormSolver`), the default.
-  * ``"dp"``          - Algorithms 1+2 verbatim (tick-quantized DP).
+    (:class:`repro.core.placement.ClosedFormSolver`), the default;
+    solves the whole t-grid in one vectorized pass (DESIGN.md SS.6).
+  * ``"dp"``          - Algorithms 1+2 (tick-quantized DP) on the
+    :mod:`repro.kernels.knapsack_dp` op (pallas on TPU, jitted ref on
+    CPU, ``pallas_interpret`` for kernel-path CI coverage).
   * ``"fixed-baseline"`` / ``"fixed-hetero"`` / ``"fixed-hybrid"`` - the
     Table I comparison policies as *degenerate* solvers: one placement for
     every constraint, packaged as a single-entry LUT so they can be
@@ -44,11 +47,19 @@ class PlacementSolver:
 
 @dataclasses.dataclass
 class LUTMethodSolver(PlacementSolver):
-    """Dynamic solver backed by :func:`repro.core.placement.build_lut`."""
+    """Dynamic solver backed by :func:`repro.core.placement.build_lut`.
+
+    ``batched`` selects the vectorized whole-t-grid drivers (DESIGN.md
+    SS.6, the default) vs the per-point reference loop - byte-identical
+    output either way; ``dp_backend`` picks the ``knapsack_dp`` op
+    backend for ``method="dp"`` (auto / pallas / pallas_interpret /
+    ref)."""
 
     name: str
     method: str                     # build_lut method key
     fixed: bool = False
+    batched: bool = True
+    dp_backend: str = "auto"
 
     def build_lut(self, em: EnergyModel, *, t_slice_ns: float,
                   n_points: int = 64, k_groups: int = 256,
@@ -56,7 +67,8 @@ class LUTMethodSolver(PlacementSolver):
         return build_lut(em.arch, em.model, t_slice_ns=t_slice_ns,
                          n_points=n_points, rho=em.rho, method=self.method,
                          k_groups=k_groups, static_window=static_window,
-                         em=em)
+                         em=em, batched=self.batched,
+                         dp_backend=self.dp_backend)
 
 
 @dataclasses.dataclass

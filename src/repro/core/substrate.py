@@ -20,6 +20,8 @@ one) - behind a string-keyed registry:
   ``gpu-pool``       HP/LP GPU SM-cluster pools at two DVFS points x
                      {bf16, fp8/int8} HBM residency (``lp_clock`` knob)
   ``gpu-pool-mixed`` same, heterogeneous fleet shapes (odd engines half)
+  ``cxl-tier``       HP/LP node pools x {node-local DDR, CXL-attached}
+                     residency (edge-to-cloud memory tiering)
   ================== ==================================================
 
 Adding a backend is one :func:`register_substrate` call (DESIGN.md SS.5);
@@ -74,13 +76,22 @@ class Substrate:
     def build_lut(self, workload=None, *, solver=None,
                   t_slice_ns: Optional[float] = None,
                   n_points: Optional[int] = None,
-                  rho: Optional[float] = None) -> PlacementLUT:
+                  rho: Optional[float] = None,
+                  compiler=None) -> PlacementLUT:
+        """Build the placement LUT through the (or the named) solver; a
+        :class:`~repro.core.compiler.PlacementCompiler` routes the build
+        through its shared cache instead."""
         em = self.energy_model(workload, rho=rho)
         if t_slice_ns is None:
             t_slice_ns = self.default_t_slice_ns(em.model, rho=rho)
+        n = self.lut_points if n_points is None else n_points
+        if compiler is not None:
+            return compiler.lut(em, solver=solver or self.solver,
+                                t_slice_ns=t_slice_ns, n_points=n,
+                                static_window=self.static_window,
+                                variant_key=self.variant_key())
         return make_solver(solver or self.solver).build_lut(
-            em, t_slice_ns=t_slice_ns,
-            n_points=self.lut_points if n_points is None else n_points,
+            em, t_slice_ns=t_slice_ns, n_points=n,
             static_window=self.static_window)
 
     # -- functional placement ----------------------------------------------
@@ -96,8 +107,14 @@ class Substrate:
         return self
 
     def variant_key(self) -> tuple:
-        """Hashable shape key; engines sharing it share one LUT."""
-        return (self.name,)
+        """Hashable shape key; engines sharing it share one LUT and one
+        :class:`~repro.core.compiler.PlacementCompiler` cache entry. The
+        default fingerprints the arch's space shaping, so substrates of
+        the same name built with different arch kwargs (module/bank
+        counts) never collide in a shared compiler cache."""
+        return (self.name,) + tuple(
+            (s.name, s.n_modules, s.banks_per_module)
+            for s in self.arch.spaces)
 
     def replace(self, **kw) -> "Substrate":
         return dataclasses.replace(self, **kw)
@@ -151,10 +168,45 @@ class ServePoolSubstrate(Substrate):
     weight residency as the storage spaces, decoded through a functional
     ``HeteroServeEngine`` (DESIGN.md SS.3/SS.5). Subclasses supply the
     pool fields, the arch builder and the mixed-fleet shaping; workload
-    mapping (serving ModelConfig -> task spec), slice sizing and
-    functional placement application are identical across pools."""
+    mapping (serving ModelConfig -> task spec), slice sizing, mixed-fleet
+    shaping (via ``_POOL_FIELDS``) and functional placement application
+    are identical across pools."""
 
     supports_decode = True
+    #: names of the dataclass fields holding the (HP, LP) pool sizes
+    #: (chips / SM clusters / nodes); the shared fleet-shaping methods
+    #: below operate on whatever the subclass calls them.
+    _POOL_FIELDS = ("n_hp", "n_lp")
+
+    def _pool_counts(self) -> Tuple[int, int]:
+        hp_f, lp_f = self._POOL_FIELDS
+        return getattr(self, hp_f), getattr(self, lp_f)
+
+    def pool_plan(self, index: int) -> Tuple[int, int]:
+        """(HP, LP) pool sizes of fleet engine ``index``: ``mixed=True``
+        gives odd-indexed engines half of each pool (floored at 1)."""
+        hp, lp = self._pool_counts()
+        if self.mixed and index % 2 == 1:
+            return (max(hp // 2, 1), max(lp // 2, 1))
+        return (hp, lp)
+
+    def engine_variant(self, index: int) -> "ServePoolSubstrate":
+        hp, lp = self.pool_plan(index)
+        if (hp, lp) == self._pool_counts():
+            return self
+        hp_f, lp_f = self._POOL_FIELDS
+        return dataclasses.replace(self, mixed=False,
+                                   **{hp_f: hp, lp_f: lp})
+
+    def variant_key(self) -> tuple:
+        """(name, HP pool, LP pool[, lp_clock]) - pool sizes fully
+        determine the arch, plus the DVFS point where the pool has one
+        (engines at different DVFS points must not share a LUT)."""
+        key = (self.name,) + self._pool_counts()
+        lp_clock = getattr(self, "lp_clock", None)
+        if lp_clock is not None:
+            key += (round(lp_clock, 4),)
+        return key
 
     def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
         if isinstance(workload, sp.ModelSpec):
@@ -200,26 +252,12 @@ class TPUPoolSubstrate(ServePoolSubstrate):
     mixed: bool = False
     arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
 
+    _POOL_FIELDS = ("n_hp_chips", "n_lp_chips")
+
     def __post_init__(self):
         from repro.serve.hetero import tpu_arch
         object.__setattr__(self, "arch",
                            tpu_arch(self.n_hp_chips, self.n_lp_chips))
-
-    def chip_plan(self, index: int) -> Tuple[int, int]:
-        if self.mixed and index % 2 == 1:
-            return (max(self.n_hp_chips // 2, 1),
-                    max(self.n_lp_chips // 2, 1))
-        return (self.n_hp_chips, self.n_lp_chips)
-
-    def engine_variant(self, index: int) -> "TPUPoolSubstrate":
-        hp, lp = self.chip_plan(index)
-        if (hp, lp) == (self.n_hp_chips, self.n_lp_chips):
-            return self
-        return dataclasses.replace(self, n_hp_chips=hp, n_lp_chips=lp,
-                                   mixed=False)
-
-    def variant_key(self) -> tuple:
-        return (self.name, self.n_hp_chips, self.n_lp_chips)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -256,28 +294,53 @@ class GPUPoolSubstrate(ServePoolSubstrate):
     mixed: bool = False
     arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
 
+    _POOL_FIELDS = ("n_hp_clusters", "n_lp_clusters")
+
     def __post_init__(self):
         from repro.serve.gpu import gpu_arch
         object.__setattr__(self, "arch",
                            gpu_arch(self.n_hp_clusters, self.n_lp_clusters,
                                     lp_clock=self.lp_clock))
 
-    def cluster_plan(self, index: int) -> Tuple[int, int]:
-        if self.mixed and index % 2 == 1:
-            return (max(self.n_hp_clusters // 2, 1),
-                    max(self.n_lp_clusters // 2, 1))
-        return (self.n_hp_clusters, self.n_lp_clusters)
 
-    def engine_variant(self, index: int) -> "GPUPoolSubstrate":
-        hp, lp = self.cluster_plan(index)
-        if (hp, lp) == (self.n_hp_clusters, self.n_lp_clusters):
-            return self
-        return dataclasses.replace(self, n_hp_clusters=hp,
-                                   n_lp_clusters=lp, mixed=False)
+@dataclasses.dataclass(frozen=True)
+class CXLTierSubstrate(ServePoolSubstrate):
+    """HP/LP node pools with {node-local DDR, CXL-attached} residency as
+    the volatile/non-volatile storage-space pair (constants in
+    :mod:`repro.serve.cxl`; after Oliveira et al., PAPERS.md).
 
-    def variant_key(self) -> tuple:
-        return (self.name, self.n_hp_clusters, self.n_lp_clusters,
-                round(self.lp_clock, 4))
+    The edge-to-cloud tiering scenario: weights are INT8 in both tiers,
+    so the placement trade is pure locality (local DDR bandwidth, but
+    refresh + PHY stay up while holding) versus standby power (the CXL
+    expander powers down in retention when its pool idles, but every
+    read pays the link premium). ``lp_clock`` scales the efficiency
+    pool's node clock exactly as on the GPU pools. Accounting-only: the
+    CXL tier has no functional decode engine, placement lives in the
+    energy/timing model (the CI substrate smoke and fleet accounting
+    paths exercise it; ``supports_decode`` stays False)."""
+
+    supports_decode = False
+    static_window = "t_slice"    # pinned-slice pools: see GPUPoolSubstrate
+
+    name: str = "cxl-tier"
+    n_hp_nodes: int = 4
+    n_lp_nodes: int = 4
+    lp_clock: float = 0.5        # repro.serve.cxl.LP_CLOCK
+    tokens_per_task: int = 8
+    rho: float = 32.0
+    solver: str = "closed-form"
+    lut_points: int = 32
+    peak_tasks: int = workloads.PEAK_TASKS
+    mixed: bool = False
+    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
+
+    _POOL_FIELDS = ("n_hp_nodes", "n_lp_nodes")
+
+    def __post_init__(self):
+        from repro.serve.cxl import cxl_arch
+        object.__setattr__(self, "arch",
+                           cxl_arch(self.n_hp_nodes, self.n_lp_nodes,
+                                    lp_clock=self.lp_clock))
 
 
 # ---------------------------------------------------------------------------
@@ -348,9 +411,14 @@ def _gpu_factory(name: str, mixed: bool) -> SubstrateFactory:
     return factory
 
 
+def _cxl_factory(**kw) -> CXLTierSubstrate:
+    return CXLTierSubstrate(**kw)
+
+
 register_substrate("tpu-pool", _tpu_factory("tpu-pool", mixed=False))
 register_substrate("tpu-pool-mixed",
                    _tpu_factory("tpu-pool-mixed", mixed=True))
 register_substrate("gpu-pool", _gpu_factory("gpu-pool", mixed=False))
 register_substrate("gpu-pool-mixed",
                    _gpu_factory("gpu-pool-mixed", mixed=True))
+register_substrate("cxl-tier", _cxl_factory)

@@ -11,6 +11,12 @@ the previous panel, which is passed via a (T+1, 1) carry column. Grid is
 (K/bk,) - panels are independent given the carry, and the t-recurrence runs
 inside as a fori_loop over rows.
 
+The per-item costs (t_i, e_i) enter as SMEM scalar operands, not as
+static jit arguments: the LUT builder folds every storage space (and, on
+straggler rebuilds, every slowdown signature) with different costs, so
+baking them into the compile key would recompile the kernel per cost
+value - one compile per table shape instead.
+
 VMEM: (T+1)*(bk+2)*4 B; defaults (T=2048, bk=512) use ~4.2 MB.
 """
 from __future__ import annotations
@@ -20,12 +26,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 INF = jnp.float32(jnp.inf)
 
 
-def _dp_kernel(dp_ref, carry_ref, o_ref, *, t_i: int, e_i: float, T1: int):
-    """One K-panel: run the t-recurrence, consuming the k=-1 carry column."""
+def _dp_kernel(t_ref, e_ref, dp_ref, carry_ref, o_ref, *, T1: int):
+    """One K-panel: run the t-recurrence, consuming the k=-1 carry column.
+
+    ``t_ref``/``e_ref`` are (1, 1) SMEM scalars holding the item's tick
+    cost and energy."""
+    t_i = t_ref[0, 0]
+    e_i = e_ref[0, 0]
+
     def body(t, _):
         row = dp_ref[t, :]
         prev_t = jnp.maximum(t - t_i, 0)
@@ -33,30 +46,34 @@ def _dp_kernel(dp_ref, carry_ref, o_ref, *, t_i: int, e_i: float, T1: int):
         # rows of the output panel, shifted by one k (carry provides k=-1;
         # carry holds the *updated* last column of the previous panel).
         shifted = jnp.concatenate([carry_ref[prev_t, :], o_ref[prev_t, :-1]])
-        take = jnp.where(t >= t_i, shifted + jnp.float32(e_i), float("inf"))
+        take = jnp.where(t >= t_i, shifted + e_i, float("inf"))
         o_ref[t, :] = jnp.minimum(row, take)
         return 0
 
     jax.lax.fori_loop(0, T1, body, 0, unroll=False)
 
 
-@functools.partial(jax.jit, static_argnames=("t_i", "e_i", "bk", "interpret"))
-def dp_space_update_pallas(dp_prev: jnp.ndarray, *, t_i: int, e_i: float,
+@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+def dp_space_update_pallas(dp_prev: jnp.ndarray, *, t_i, e_i,
                            bk: int = 512, interpret: bool = False
                            ) -> jnp.ndarray:
     """Fold one storage space into the (T+1, K+1) DP table.
 
     K-panels have a sequential dependency through the carry column, so the
     wrapper loops panels in python (K/bk steps, each a pallas_call); within
-    a panel the VPU processes bk lanes per row step.
+    a panel the VPU processes bk lanes per row step. ``t_i``/``e_i`` may
+    be python numbers or traced scalars - they are shipped to the kernel
+    as SMEM operands, so the compile cache is keyed on the table shape
+    and ``bk`` only.
     """
     T1, K1 = dp_prev.shape
     pad_k = (-K1) % bk
     dp = jnp.pad(dp_prev, ((0, 0), (0, pad_k)), constant_values=jnp.inf)
     Kp = dp.shape[1]
 
-    kernel = functools.partial(_dp_kernel, t_i=int(t_i), e_i=float(e_i),
-                               T1=T1)
+    t_arr = jnp.asarray(t_i, jnp.int32).reshape(1, 1)
+    e_arr = jnp.asarray(e_i, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_dp_kernel, T1=T1)
     carry = jnp.full((T1, 1), INF, dtype=dp.dtype)   # k=-1 column
     panels = []
     for p in range(Kp // bk):
@@ -65,13 +82,17 @@ def dp_space_update_pallas(dp_prev: jnp.ndarray, *, t_i: int, e_i: float,
             kernel,
             grid=(1,),
             in_specs=[
+                pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM),
+                pl.BlockSpec((1, 1), lambda i: (0, 0),
+                             memory_space=pltpu.SMEM),
                 pl.BlockSpec((T1, bk), lambda i: (0, 0)),
                 pl.BlockSpec((T1, 1), lambda i: (0, 0)),
             ],
             out_specs=pl.BlockSpec((T1, bk), lambda i: (0, 0)),
             out_shape=jax.ShapeDtypeStruct((T1, bk), dp.dtype),
             interpret=interpret,
-        )(panel, carry)
+        )(t_arr, e_arr, panel, carry)
         carry = panel_out[:, -1:]
         panels.append(panel_out)
     result = jnp.concatenate(panels, axis=1)[:, :K1]

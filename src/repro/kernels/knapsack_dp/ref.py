@@ -15,14 +15,15 @@ import jax.numpy as jnp
 INF = jnp.float32(jnp.inf)
 
 
-def dp_space_update_ref(dp_prev: jnp.ndarray, t_i: int, e_i: float
-                        ) -> jnp.ndarray:
+def dp_space_update_ref(dp_prev: jnp.ndarray, t_i, e_i) -> jnp.ndarray:
     """Fold one storage space into the DP table.
 
     Args:
       dp_prev: (T+1, K+1) float32 table of the previous space.
-      t_i:     integer tick cost per item in this space (static).
-      e_i:     energy per item in this space.
+      t_i:     integer tick cost per item in this space; a python int or
+               a traced scalar (ops.py jits this fold with t_i/e_i as
+               arguments so the compile cache is keyed on shape only).
+      e_i:     energy per item in this space (python float or traced).
 
     Returns:
       (T+1, K+1) updated table.

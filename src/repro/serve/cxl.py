@@ -1,0 +1,101 @@
+"""CXL-tier re-parameterization of Eq. (1) - the edge-to-cloud memory
+tiering substrate (ROADMAP item; after Oliveira et al., "Accelerating
+NN Inference with Processing-in-DRAM", PAPERS.md).
+
+Oliveira et al. argue edge-to-cloud PIM viability hinges on cheap
+re-optimization as workloads move across memory tiers; this substrate
+instantiates exactly that tier pair for the placement engine:
+
+- **Clusters**: an HP pool of performance nodes at full clock and an LP
+  pool of efficiency nodes at ``lp_clock`` of it (voltage tracking
+  frequency, the same DVFS model as the GPU pools - energy scales as
+  :func:`repro.serve.gpu.dvfs_energy_scale`).
+- **Memory kinds as residency tiers**: node-local DDR residency is the
+  "SRAM" tier (the node's DRAM channels stay active while holding
+  weights: refresh + PHY, i.e. volatile), CXL-attached residency is the
+  "MRAM" tier (far memory behind the CXL link; reads pay the link's
+  latency/SerDes-energy premium, but the expander can drop to deep
+  power-down when the pool idles, i.e. non-volatile). Weights are INT8
+  in both tiers - unlike the bf16/int8 pools, the trade is purely
+  locality vs standby power, the Oliveira et al. DRAM-tiering trade.
+  ``rho`` is the batch reuse of one weight fetch.
+
+Eq. (1) is isomorphic - Algorithms 1/2 only see per-space ``(t_i,
+e_i)`` - so ``cxl_arch()`` builds a :class:`~repro.core.spaces.PIMArch`
+from the constants below and the whole placement stack runs unchanged.
+Constants are documented DDR5/CXL-1.1-class estimates per node.
+
+This module is import-light on purpose (no jax): the substrate registry
+builds archs from it without pulling in the serving runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import spaces as sp
+from repro.serve.gpu import dvfs_energy_scale
+
+# -- per-node constants (documented estimates) ------------------------------
+PEAK_FLOPS = 4e12            # INT8 MAC throughput of one node's engine
+DDR_BW = 64e9                # B/s, local DDR5 channels of one node
+CXL_BW = 24e9                # B/s, the node's CXL.mem link share
+DDR_PJ_PER_BYTE = 12.0       # device + controller access energy
+CXL_PJ_PER_BYTE = 21.0       # DDR on the expander + link SerDes both ways
+MAC_PJ = 2.0                 # INT8 MAC incl. operand routing
+# Incremental standby power of keeping a residency tier live (same
+# dynamic-dominated regime as the other pool substrates): local DDR must
+# keep refresh + channel PHY up while holding weights; the CXL expander
+# supports deep power-down with retention when its pool idles.
+DDR_IDLE_W = 9.0             # node DDR channels active, holding weights
+CXL_SLEEP_W = 1.5            # expander in retention power-down
+DDR_GB_PER_NODE = 32         # local capacity slice
+CXL_GB_PER_NODE = 128        # far-memory capacity slice
+
+LP_CLOCK = 0.5               # default clock scale of the efficiency pool
+
+
+def _mem(kind: str, energy: float) -> sp.MemorySpec:
+    """One residency tier on one node: ``sram`` = local DDR (volatile),
+    ``mram`` = CXL-attached (non-volatile analogue). INT8 weights, one
+    byte per use in both tiers; link bandwidth does not scale with the
+    node's DVFS point, only node-side compute does."""
+    bw = DDR_BW if kind == "sram" else CXL_BW
+    pj_byte = DDR_PJ_PER_BYTE if kind == "sram" else CXL_PJ_PER_BYTE
+    cap_gb = DDR_GB_PER_NODE if kind == "sram" else CXL_GB_PER_NODE
+    static_w = DDR_IDLE_W if kind == "sram" else CXL_SLEEP_W
+    read_ns = 1.0 / bw * 1e9
+    return sp.MemorySpec(
+        kind, read_ns=read_ns, write_ns=4 * read_ns,
+        read_mw=pj_byte / read_ns, write_mw=pj_byte / (2 * read_ns),
+        static_mw=static_w * 1e3 * energy,       # W -> mW
+        volatile=(kind == "sram"),
+        capacity_bytes=cap_gb * 2 ** 30)
+
+
+def _pe(clock: float, energy: float) -> sp.PESpec:
+    op_ns = 1.0 / PEAK_FLOPS / clock * 1e9       # one INT8 MAC
+    return sp.PESpec(op_ns=op_ns, dyn_mw=MAC_PJ * energy / op_ns,
+                     static_mw=0.0)
+
+
+def cxl_arch(n_hp_nodes: int = 4, n_lp_nodes: int = 4, *,
+             lp_clock: float = LP_CLOCK) -> sp.PIMArch:
+    """HP/LP node pools x {local DDR, CXL-attached} residency as a
+    PIMArch."""
+    lp_energy = dvfs_energy_scale(lp_clock)
+    hp = sp.ClusterSpec("hp", _pe(1.0, 1.0), n_hp_nodes, ())
+    lp = sp.ClusterSpec("lp", _pe(lp_clock, lp_energy), n_lp_nodes, ())
+
+    def spaces_for(c: sp.ClusterSpec, energy: float) -> tuple:
+        mram = _mem("mram", energy)
+        sram = _mem("sram", energy)
+        return (
+            sp.StorageSpace(f"{c.name}_mram", c.name, mram, sram, c.pe,
+                            c.n_modules),
+            sp.StorageSpace(f"{c.name}_sram", c.name, sram, sram, c.pe,
+                            c.n_modules),
+        )
+
+    hp = dataclasses.replace(hp, spaces=spaces_for(hp, 1.0))
+    lp = dataclasses.replace(lp, spaces=spaces_for(lp, lp_energy))
+    return sp.PIMArch("cxl_tier", (hp, lp))

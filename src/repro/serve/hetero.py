@@ -127,7 +127,8 @@ class HeteroServeEngine:
                  n_hp_chips: int = 4, n_lp_chips: int = 4,
                  tokens_per_task: int = 8, rho: float = 64.0,
                  max_batch: int = 16, peak_tasks: int = 10, seed: int = 0,
-                 substrate=None):
+                 substrate=None, lut_points: Optional[int] = None,
+                 compiler=None):
         from repro.core.substrate import make_substrate
         if substrate is None:
             # rho: weight-stationary reuse on TPU = tokens sharing one
@@ -147,9 +148,13 @@ class HeteroServeEngine:
         if t_slice_ms is None:
             t_slice_ms = substrate.default_t_slice_ns(self.model_spec) / 1e6
         self.t_slice_ms = t_slice_ms
+        # a shared PlacementCompiler (api.fleet passes one) makes this
+        # engine's LUT builds - including straggler rebuilds - hit the
+        # fleet-wide cache
         self.sched = TimeSliceScheduler.from_substrate(
             substrate, self.model_spec, t_slice_ns=t_slice_ms * 1e6,
-            lut_points=32)
+            lut_points=32 if lut_points is None else lut_points,
+            compiler=compiler)
         self.max_batch = max_batch
         self._tiered: Optional[Dict] = None
         self._tiered_placement: Optional[Dict[str, int]] = None

@@ -226,6 +226,114 @@ def test_api_fleet_matches_legacy_build_fleet():
     assert s_legacy == s_new
 
 
+# -- batched placement compiler ----------------------------------------------
+
+
+@pytest.mark.parametrize("method", ["closed_form", "dp"])
+@pytest.mark.parametrize("name", api.list_substrates())
+def test_batched_lut_is_byte_identical_to_loop(name, method):
+    """The batched drivers (vectorized closed-form solve over the whole
+    t-grid; full-table Algorithm-2 combine for dp) must produce LUTs
+    byte-identical to the per-point loop, for every registered substrate
+    and both solver methods."""
+    from repro.core.placement import build_lut
+    sub = api.substrate(name)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    em = sub.energy_model(model)
+    kw = dict(t_slice_ns=T, n_points=6, k_groups=64, em=em, method=method,
+              static_window=sub.static_window)
+    batched = build_lut(sub.arch, model, batched=True, **kw)
+    loop = build_lut(sub.arch, model, batched=False, **kw)
+    assert batched.entries == loop.entries, (name, method)
+
+
+def test_compiler_dedupes_fleet_shapes_and_serves_cache_hits():
+    pc = api.compiler()
+    sub = api.substrate("tpu-pool-mixed")
+    variants = [sub.engine_variant(i) for i in range(6)]
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    luts = pc.compile(variants, model, t_slice_ns=T, n_points=8)
+    # 6 engines, 2 distinct shapes -> 2 builds, one LUT per shape
+    assert len(luts) == 2
+    assert pc.stats() == {"entries": 2, "builds": 2, "hits": 0}
+    # a second fleet on the same shapes is served entirely from cache
+    again = pc.compile(variants, model, t_slice_ns=T, n_points=8)
+    assert pc.n_builds == 2 and pc.n_hits == 2
+    for key, lut in luts.items():
+        assert again[key] is lut
+
+
+def test_compiler_lut_matches_direct_solver_build():
+    from repro.core.solvers import make_solver
+    sub = api.substrate("edge-hhpim", rho=RHO)
+    model = sub.model_spec(sp.EFFICIENTNET_B0)
+    em = sub.energy_model(model)
+    T = sub.default_t_slice_ns(model)
+    pc = api.compiler()
+    # variant_key addresses the cache entry; substrate-routed builds
+    # (api.lut / schedulers) use substrate.variant_key()
+    via_compiler = pc.lut(em, solver="closed-form", t_slice_ns=T,
+                          n_points=12, variant_key=sub.variant_key())
+    direct = make_solver("closed-form").build_lut(em, t_slice_ns=T,
+                                                  n_points=12)
+    assert via_compiler.entries == direct.entries
+    # api.lut with a compiler routes through (and fills) the same cache
+    assert api.lut(sub, model, t_slice_ns=T, n_points=12,
+                   compiler=pc).entries == direct.entries
+    assert pc.n_hits == 1
+
+
+def test_compiler_distinguishes_edge_arch_overrides():
+    """Edge substrates built with different arch kwargs must not collide
+    in a shared compiler cache: the default variant_key fingerprints the
+    arch's space shaping."""
+    pc = api.compiler()
+    m = sp.EFFICIENTNET_B0
+    full = api.substrate("edge-hhpim", rho=RHO)
+    small = api.substrate("edge-hhpim", rho=RHO, n_hp=2)
+    assert full.variant_key() != small.variant_key()
+    T = full.default_t_slice_ns(m)      # reference-arch sizing: shared
+    lut_full = api.lut(full, m, t_slice_ns=T, n_points=8, compiler=pc)
+    lut_small = api.lut(small, m, t_slice_ns=T, n_points=8, compiler=pc)
+    assert pc.n_builds == 2 and pc.n_hits == 0
+    assert lut_small.entries == small.build_lut(
+        m, t_slice_ns=T, n_points=8).entries
+    assert lut_full.entries != lut_small.entries
+
+
+def test_fleet_shares_straggler_rebuilds_through_compiler():
+    """Two same-shape engines observing the same slowdown signature must
+    pay one LUT rebuild between them (the compiler keys on slowdown)."""
+    from repro.fleet.traces import replay_trace
+    pc = api.compiler()
+    fl = api.fleet("tpu-pool", n_engines=2, forecaster="none", compiler=pc)
+    fl.run(replay_trace([2]))
+    builds_before = pc.n_builds
+    fl.workers[0].sched.observe_slowdown("lp", 1.5)
+    _ = fl.workers[0].sched.lut          # rebuild for the new signature
+    assert pc.n_builds == builds_before + 1
+    fl.workers[1].sched.observe_slowdown("lp", 1.5)
+    _ = fl.workers[1].sched.lut          # same shape + signature: cache hit
+    assert pc.n_builds == builds_before + 1
+    # a *different* slowdown still gets its own entry
+    fl.workers[1].sched.observe_slowdown("lp", 2.0)
+    _ = fl.workers[1].sched.lut
+    assert pc.n_builds == builds_before + 2
+
+
+def test_fleet_with_compiler_matches_fleet_without():
+    from repro.fleet import summarize
+    from repro.fleet.traces import replay_trace
+    plain = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none")
+    shared = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none",
+                       compiler=api.compiler())
+    s_plain = summarize(plain.run(replay_trace([8, 8, 8, 8])))
+    s_shared = summarize(shared.run(replay_trace([8, 8, 8, 8])))
+    assert s_plain == s_shared
+
+
 # -- deprecation shims -------------------------------------------------------
 
 

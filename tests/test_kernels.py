@@ -139,6 +139,81 @@ def test_knapsack_dp_ref_matches_numpy(t_items, data):
     _tables_equal(ref, dp_np[-1])
 
 
+def test_knapsack_dp_stage_tables_match_numpy_oracle():
+    """return_stages must reproduce every intermediate per-space table of
+    the float64 numpy DP (the tables backtrace_tables walks)."""
+    t_items, e_items = [2, 3, 1], [5.0, 1.0, 9.0]
+    T, K = 48, 11
+    stages = knapsack_dp(t_items, e_items, T, K, backend="ref",
+                         return_stages=True)
+    dp_np, _ = dp_min_energy(t_items, e_items, T, K)
+    assert stages.shape == dp_np.shape == (4, T + 1, K + 1)
+    for i in range(4):
+        _tables_equal(stages[i], dp_np[i])
+    pal = knapsack_dp(t_items, e_items, T, K, backend="pallas_interpret",
+                      bk=8, return_stages=True)
+    for i in range(4):
+        _tables_equal(stages[i], pal[i])
+
+
+def test_backtrace_tables_consistent_with_dp_objective():
+    """Counts recovered from the stage tables reproduce the DP optimum
+    and respect the time budget (the production dp-LUT backtrace)."""
+    from repro.core.placement import backtrace_tables
+    t_items, e_items = [3, 2], [7.0, 3.0]
+    T, K = 30, 8
+    stages = np.asarray(knapsack_dp(t_items, e_items, T, K, backend="ref",
+                                    return_stages=True))
+    for t in range(T + 1):
+        for k in range(K + 1):
+            if not np.isfinite(stages[-1][t, k]):
+                continue
+            x = backtrace_tables(stages, t_items, t, k)
+            assert sum(x) == k
+            assert sum(xi * ti for xi, ti in zip(x, t_items)) <= t
+            e = sum(xi * ei for xi, ei in zip(x, e_items))
+            assert e == pytest.approx(float(stages[-1][t, k]), rel=1e-6)
+
+
+def test_knapsack_backend_env_override(monkeypatch):
+    """backend="auto" resolves through REPRO_KNAPSACK_BACKEND, so CI can
+    force the kernel (interpret) path on CPU runners where auto would
+    otherwise always pick ref."""
+    from repro.kernels.knapsack_dp.ops import BACKEND_ENV, resolve_backend
+    monkeypatch.delenv(BACKEND_ENV, raising=False)
+    assert resolve_backend("ref") == "ref"
+    assert resolve_backend("auto") in ("ref", "pallas")
+    monkeypatch.setenv(BACKEND_ENV, "pallas_interpret")
+    assert resolve_backend("auto") == "pallas_interpret"
+    assert resolve_backend("ref") == "ref"   # explicit choice wins
+    out = knapsack_dp([2], [3.0], 12, 4, backend="auto", bk=4)
+    _tables_equal(out, knapsack_dp([2], [3.0], 12, 4, backend="ref"))
+    # a typo'd env value or explicit backend fails with the valid names,
+    # not an opaque lowering error
+    monkeypatch.setenv(BACKEND_ENV, "pallas-interpret")
+    with pytest.raises(ValueError, match="unknown knapsack_dp backend"):
+        resolve_backend("auto")
+    with pytest.raises(ValueError, match="unknown knapsack_dp backend"):
+        knapsack_dp([2], [3.0], 12, 4, backend="nope")
+
+
+def test_dp_lut_identical_across_backends():
+    """build_lut(method="dp") produces the same LUT through the ref
+    backend and the Pallas kernel (interpret mode) - the dp production
+    path is exercised end-to-end on CPU."""
+    from repro.core import spaces as sp
+    from repro.core.placement import build_lut
+    from repro.core.system import default_t_slice_ns
+    m = sp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, 4.0)
+    kw = dict(t_slice_ns=T, n_points=5, rho=4.0, method="dp",
+              k_groups=24, dp_ticks=192)
+    ref = build_lut(sp.hh_pim(), m, dp_backend="ref", **kw)
+    pal = build_lut(sp.hh_pim(), m, dp_backend="pallas_interpret", **kw)
+    assert ref.entries == pal.entries
+    assert any(e.feasible for e in ref.entries)
+
+
 def test_knapsack_dp_kernel_multi_space_paper_instance():
     """Run a realistically-sized HH-PIM cluster instance through the kernel
     path and compare the induced optimum against the verbatim numpy DP."""
