@@ -285,6 +285,56 @@ def pool_substrates() -> Tuple[List[Dict], Dict]:
     return rows, derived
 
 
+def multipool() -> Tuple[List[Dict], Dict]:
+    """K-pool combine cross-check: the three-pool ``cxl-tier-3``
+    substrate (HBM / node-DDR / CXL far pool) run through the scheduler
+    on the six workload cases, once per solver method - the K=3
+    exercise of the min-plus multi-cluster combine (DESIGN.md SS.7).
+    Gated in CI like the gpu pool check: identical deadline behaviour
+    and energy within the shared solver tolerance."""
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    luts = {s: sub.build_lut(model, t_slice_ns=T, n_points=24, solver=s)
+            for s in ("closed-form", "dp")}
+    rows, devs = [], []
+    misses_agree = True
+    for scen, loads in workloads.SCENARIOS.items():
+        res = {}
+        for solver, lut in luts.items():
+            t0 = time.perf_counter()
+            sched = api.scheduler(sub, model, t_slice_ns=T, lut_points=24,
+                                  solver=solver, lut=lut)
+            reports = sched.run(loads)
+            res[solver] = (sum(r.energy_pj for r in reports),
+                           sum(not r.deadline_met for r in reports),
+                           sum(r.moved_weights > 0 for r in reports),
+                           time.perf_counter() - t0)
+        cf, dp = res["closed-form"], res["dp"]
+        dev = 100 * (dp[0] / cf[0] - 1)
+        devs.append(abs(dev))
+        misses_agree &= cf[1] == dp[1]
+        rows.append({"scenario": scen,
+                     "closed_form_uj": round(cf[0] * 1e-6, 1),
+                     "dp_uj": round(dp[0] * 1e-6, 1),
+                     "energy_dev_pct": round(dev, 3),
+                     "cf_misses": cf[1], "dp_misses": dp[1],
+                     "cf_migrating_slices": cf[2],
+                     "dp_migrating_slices": dp[2],
+                     "cf_run_s": round(cf[3], 3),
+                     "dp_run_s": round(dp[3], 3)})
+    n_clusters = len(sub.arch.clusters)
+    derived = {
+        "n_clusters": n_clusters,
+        "max_energy_dev_pct": round(float(np.max(devs)), 3),
+        "misses_agree": misses_agree,
+        "cxl3_solver_agreement_ok": bool(
+            misses_agree and n_clusters == 3
+            and float(np.max(devs)) <= SOLVER_AGREEMENT_TOL_PCT),
+    }
+    return rows, derived
+
+
 def lut_build() -> Tuple[List[Dict], Dict]:
     """Placement-compiler throughput: batched vs per-point LUT builds.
 
@@ -385,5 +435,6 @@ ALL = {
     "fig4_scheduler_latency": fig4_scheduler_latency,
     "solver_agreement": solver_agreement,
     "pool_substrates": pool_substrates,
+    "multipool": multipool,
     "lut_build": lut_build,
 }

@@ -24,14 +24,17 @@ from pathlib import Path
 from benchmarks import paper_tables
 
 # cheap-enough-for-every-PR subset: the per-space constants table, the
-# two solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools) and
-# the placement-compiler throughput suite
-QUICK = ("table5_power", "solver_agreement", "pool_substrates", "lut_build")
+# three solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools,
+# the 3-pool cxl-tier-3 min-plus combine) and the placement-compiler
+# throughput suite
+QUICK = ("table5_power", "solver_agreement", "pool_substrates",
+         "multipool", "lut_build")
 
 # name -> (flag inside the table's derived dict that must be true)
 GATES = {
     "solver_agreement": "agreement_ok",
     "pool_substrates": "gpu_solver_agreement_ok",
+    "multipool": "cxl3_solver_agreement_ok",
     "lut_build": "speedup_ok",
 }
 

@@ -117,13 +117,15 @@ def engine(sub: Union[str, Substrate] = "tpu-pool", cfg=None, params=None,
            seed: int = 0, lut_points: Optional[int] = None,
            compiler: Optional[PlacementCompiler] = None, **over):
     """Construct a functional serve engine (weights actually re-tiered per
-    placement) on a TPU-pool substrate."""
+    placement) on a decode-capable pool substrate (tpu/gpu pools and the
+    cxl tiers; the substrate's ``tier_plan`` sets the column split)."""
     from repro.serve.hetero import HeteroServeEngine
     s = substrate(sub, **over)
     if not s.supports_decode:
         raise ValueError(
             f"substrate {s.name!r} has no functional serve engine "
-            f"(accounting-only); use a tpu-pool substrate")
+            f"(accounting-only); use a substrate with supports_decode "
+            f"(tpu-pool / gpu-pool / cxl-tier families)")
     return HeteroServeEngine(cfg, params, substrate=s,
                              t_slice_ms=t_slice_ms, max_batch=max_batch,
                              seed=seed, lut_points=lut_points,

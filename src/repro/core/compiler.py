@@ -16,13 +16,35 @@ cache across engines, fleets and slices.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
+import os
+from pathlib import Path
 from typing import Dict, Iterable, Optional, Tuple, Union
 
 from repro.core.energy import EnergyModel
-from repro.core.placement import PlacementLUT
+from repro.core.placement import LUTEntry, PlacementLUT
 from repro.core.solvers import PlacementSolver, make_solver
 
 CacheKey = Tuple
+
+#: serialized LUT-cache format version (bump on incompatible changes;
+#: load() skips files with a different version instead of raising)
+CACHE_FORMAT_VERSION = 1
+
+
+def _key_to_jsonable(key):
+    """Cache keys are nested tuples of str/int/float; JSON stores them
+    as nested lists."""
+    if isinstance(key, tuple):
+        return [_key_to_jsonable(k) for k in key]
+    return key
+
+
+def _key_from_jsonable(key):
+    if isinstance(key, list):
+        return tuple(_key_from_jsonable(k) for k in key)
+    return key
 
 
 def slowdown_signature(time_scale) -> tuple:
@@ -104,6 +126,50 @@ class PlacementCompiler:
                 n_points=(sub.lut_points if n_points is None else n_points),
                 static_window=sub.static_window, variant_key=vk)
         return out
+
+    # -- warm start ---------------------------------------------------------
+    # Fleet restarts shouldn't pay bring-up compiles again: save() the
+    # cache next to the checkpoints, load() it into the next process'
+    # compiler, and every unchanged (variant, model, solver, slice,
+    # slowdown) key becomes a cache hit. JSON keeps the bytes exact:
+    # Python's float repr round-trips (including +-inf), so a reloaded
+    # LUT compares equal (==) to the one that was built.
+
+    def save(self, path) -> Path:
+        """Serialize the LUT cache to ``path`` (atomic tmp+rename)."""
+        path = Path(path)
+        payload = {"version": CACHE_FORMAT_VERSION, "luts": []}
+        for key, lut in self._cache.items():
+            payload["luts"].append({
+                "key": _key_to_jsonable(key),
+                "arch": lut.arch_name, "model": lut.model_name,
+                "entries": [dataclasses.asdict(e) for e in lut.entries]})
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(path.suffix + ".tmp")
+        tmp.write_text(json.dumps(payload))
+        os.replace(tmp, path)                # atomic on POSIX
+        return path
+
+    def load(self, path) -> int:
+        """Merge a :meth:`save`d cache; existing keys win. Returns the
+        number of LUTs added; a missing file is a cold start (0), a
+        version mismatch is skipped rather than raised."""
+        path = Path(path)
+        if not path.exists():
+            return 0
+        payload = json.loads(path.read_text())
+        if payload.get("version") != CACHE_FORMAT_VERSION:
+            return 0
+        added = 0
+        for rec in payload["luts"]:
+            key = _key_from_jsonable(rec["key"])
+            if key in self._cache:
+                continue
+            entries = [LUTEntry(**e) for e in rec["entries"]]
+            self._cache[key] = PlacementLUT(rec["arch"], rec["model"],
+                                            entries)
+            added += 1
+        return added
 
     # -- introspection ------------------------------------------------------
     def __len__(self) -> int:

@@ -163,14 +163,35 @@ class EnergyModel:
 
         ``sram_only=True``  : weights in {HP,LP}-SRAM (HH-PIM peak, green),
         ``sram_only=False`` : weights in {HP,LP}-MRAM (H-PIM style, purple).
+
+        Generalized to any cluster count: makespan is balanced across
+        all clusters (``x_c`` proportional to ``1/w_c``, remainder in
+        the last cluster), which for two clusters reproduces the
+        historic split exactly. A single-tier cluster (e.g. the
+        far-pool of ``cxl-tier-3``, which has no "sram" space) falls
+        back to its one space rather than raising.
         """
         kind = "sram" if sram_only else "mram"
-        spaces_ = [c.space(kind) for c in self.arch.clusters]
-        # balance makespan: x_a * w_a = x_b * w_b, sum = K
+        spaces_ = []
+        for c in self.arch.clusters:
+            try:
+                spaces_.append(c.space(kind))
+            except KeyError:
+                if len(c.spaces) != 1:
+                    raise
+                spaces_.append(c.spaces[0])     # single-tier cluster
+        # balance makespan: x_a * w_a = x_b * w_b = ..., sum = K
         K = self.model.n_params
         w = [self.weight_time_ns(s) for s in spaces_]
         if len(spaces_) == 1:
             return {spaces_[0].name: K}
         inv = [1.0 / wi for wi in w]
-        x0 = int(round(K * inv[0] / sum(inv)))
-        return {spaces_[0].name: x0, spaces_[1].name: K - x0}
+        tot_inv = sum(inv)
+        pl: Placement = {}
+        acc = 0
+        for s, iv in zip(spaces_[:-1], inv[:-1]):
+            x = min(int(round(K * iv / tot_inv)), K - acc)
+            pl[s.name] = x
+            acc += x
+        pl[spaces_[-1].name] = K - acc
+        return pl

@@ -11,7 +11,13 @@ Three solvers, cross-validated by the test-suite:
                                    backends) and backtraces over the op's
                                    returned stage tables.
   * :func:`combine_clusters`     - Algorithm 2, combining the per-cluster
-                                   tables over (k_hp, k_lp = K - k_hp).
+                                   tables over (k_hp, k_lp = K - k_hp);
+                                   the K=2 entry point of the min-plus
+                                   K-cluster fold in
+                                   :mod:`repro.core.multipool`, which
+                                   both LUT build paths now run so 3+
+                                   pool substrates (e.g. ``cxl-tier-3``)
+                                   solve through the same code.
   * :class:`ClosedFormSolver`    - beyond-paper fast path: because per-space
                                    (t_i, e_i) are uniform across weights, the
                                    per-cluster optimum lies at an endpoint of
@@ -39,6 +45,7 @@ import numpy as np
 
 from repro.core import spaces as sp
 from repro.core.energy import EnergyModel, Placement
+from repro.core.multipool import combine_many
 
 INF = float("inf")
 
@@ -144,6 +151,11 @@ def combine_clusters(dp_hp: np.ndarray, dp_lp: np.ndarray
     """Algorithm 2: for every t, find ``k_hp`` minimizing
     ``dp_hp[t, k_hp] + dp_lp[t, K - k_hp]``.
 
+    The pairwise (K=2) entry point of the min-plus fold
+    (:func:`repro.core.multipool.combine_many`), which degenerates to
+    exactly this scan for two tables - kept as the named Algorithm-2
+    API.
+
     Args:
       dp_hp, dp_lp: final-layer tables of shape (T+1, K+1)
         (i.e. ``dp[n/2]`` of each cluster).
@@ -151,13 +163,8 @@ def combine_clusters(dp_hp: np.ndarray, dp_lp: np.ndarray
     Returns:
       (min_energy[T+1], k_opt_hp[T+1]); infeasible t rows are +inf / -1.
     """
-    T1, K1 = dp_hp.shape
-    assert dp_lp.shape == (T1, K1)
-    total = dp_hp + dp_lp[:, ::-1]          # k_lp = K - k_hp
-    k_opt = np.argmin(total, axis=1)
-    min_e = total[np.arange(T1), k_opt]
-    k_opt = np.where(np.isinf(min_e), -1, k_opt)
-    return min_e, k_opt
+    min_e, splits = combine_many([dp_hp, dp_lp])
+    return min_e, splits[:, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -194,12 +201,42 @@ class ClosedFormSolver:
                 sram = s
         return mram, sram
 
+    def _solve_far_only(self, cluster: sp.ClusterSpec,
+                        mram: sp.StorageSpace, k: np.ndarray, t_budget):
+        """Far-tier-only cluster (a single non-volatile space, e.g. the
+        CXL pool of ``cxl-tier-3``): every group lives in the one space,
+        so the per-k optimum is the feasibility-masked linear cost.
+
+        ``t_budget`` is a scalar (per-point path) or a (P, 1) column
+        (batched path); one shared code path keeps the two byte-equal.
+        """
+        em, g = self.em, self.group
+        tw_m = em.weight_time_ns(mram) * g
+        ew_m = em.weight_energy_pj(mram) * g
+        cap_m = mram.capacity_weights // g
+        busy = k * tw_m                                  # (K+1,)
+        valid = (k <= cap_m) & (busy <= t_budget + 1e-9)
+        e = k * ew_m
+        # non-volatile: on only while its cluster computes
+        e = e + np.where(k > 0, mram.static_mw_total * busy, 0.0)
+        e = e + cluster.pe_static_mw_total * busy
+        e = np.where(valid, e, INF)
+        best_xm = np.where(valid, k, 0).astype(np.int64)
+        best_busy = np.where(valid, busy, 0.0)
+        e[..., 0] = 0.0
+        best_busy[..., 0] = 0.0
+        best_xm[..., 0] = 0
+        return e, best_xm, best_busy
+
     def solve_cluster(self, cluster: sp.ClusterSpec, K: int,
                       t_budget_ns: float, static_window_ns: float
                       ) -> ClusterSolution:
         em, g = self.em, self.group
         mram, sram = self._space_vectors(cluster)
         k = np.arange(K + 1, dtype=np.float64)       # in groups
+        if sram is None:
+            return ClusterSolution(*self._solve_far_only(
+                cluster, mram, k, t_budget_ns))
         best_e = np.full(K + 1, INF)
         best_xm = np.zeros(K + 1, dtype=np.int64)
         best_busy = np.zeros(K + 1)
@@ -283,6 +320,9 @@ class ClosedFormSolver:
         win = np.asarray(static_windows_ns, np.float64).reshape(-1, 1)
         P = t_b.shape[0]
         k = np.arange(K + 1, dtype=np.float64)       # in groups
+        if sram is None:
+            return BatchedClusterSolution(*self._solve_far_only(
+                cluster, mram, k, t_b))
         K1 = K + 1
         best_e = np.full((P, K1), INF)
         best_xm = np.zeros((P, K1), dtype=np.int64)
@@ -527,33 +567,18 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
                             tc_peak.t_task_ns, True)
         return LUTEntry(float(t_c), {}, INF, INF, False)
 
-    def _cf_counts(sols: Mapping[str, ClusterSolution]
-                   ) -> Tuple[bool, Dict[str, int]]:
-        """Combine per-cluster closed-form solutions for one grid point."""
-        if len(arch.clusters) == 2:
-            hp, lp = (sols[c.name] for c in arch.clusters)
-            tot = hp.energy_pj + lp.energy_pj[::-1]
-            k_hp = int(np.argmin(tot))
-            feasible = bool(np.isfinite(tot[k_hp]))
-            counts: Dict[str, int] = {}
-            if feasible:
-                k_lp = Kg - k_hp
-                for cname, ksel in ((arch.clusters[0].name, k_hp),
-                                    (arch.clusters[1].name, k_lp)):
-                    sol = sols[cname]
-                    xm = int(sol.x_mram[ksel])
-                    for s in arch.cluster(cname).spaces:
-                        counts[s.name] = (xm if s.mem.kind == "mram"
-                                          else ksel - xm)
-            return feasible, counts
-        (cname, sol), = sols.items()
-        feasible = bool(np.isfinite(sol.energy_pj[Kg]))
-        counts = {}
-        if feasible:
-            xm = int(sol.x_mram[Kg])
-            for s in arch.cluster(cname).spaces:
-                counts[s.name] = xm if s.mem.kind == "mram" else Kg - xm
-        return feasible, counts
+    def _split_counts(sols: Mapping[str, ClusterSolution],
+                      split: Sequence[int]) -> Dict[str, int]:
+        """Per-space group counts from a per-cluster split (the
+        :func:`repro.core.multipool.combine_many` backtrace row)."""
+        counts: Dict[str, int] = {}
+        for c, k_c in zip(arch.clusters, split):
+            sol = sols[c.name]
+            ksel = int(k_c)
+            xm = int(sol.x_mram[ksel])
+            for s in c.spaces:
+                counts[s.name] = xm if s.mem.kind == "mram" else ksel - xm
+        return counts
 
     entries: List[LUTEntry] = []
     if method == "closed_form":
@@ -562,16 +587,27 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
             windows = np.asarray([_window(t_c) for t_c in t_grid])
             batch = {c.name: solver.solve_clusters(c, Kg, t_grid, windows)
                      for c in arch.clusters}
+            # K-pool optimum over the simplex of per-cluster splits: the
+            # min-plus fold over every cluster's (P, K+1) energy table
+            min_e, splits = combine_many(
+                [batch[c.name].energy_pj for c in arch.clusters])
             for i, t_c in enumerate(t_grid):
-                sols = {name: b.row(i) for name, b in batch.items()}
-                feasible, counts = _cf_counts(sols)
+                feasible = bool(np.isfinite(min_e[i]))
+                counts: Dict[str, int] = {}
+                if feasible:
+                    sols = {name: b.row(i) for name, b in batch.items()}
+                    counts = _split_counts(sols, splits[i])
                 entries.append(_entry(t_c, feasible, counts))
         else:
             for t_c in t_grid:
                 sols = {c.name: solver.solve_cluster(c, Kg, t_c,
                                                      _window(t_c))
                         for c in arch.clusters}
-                feasible, counts = _cf_counts(sols)
+                m_e, s_row = combine_many(
+                    [sols[c.name].energy_pj[None, :]
+                     for c in arch.clusters])
+                feasible = bool(np.isfinite(m_e[0]))
+                counts = _split_counts(sols, s_row[0]) if feasible else {}
                 entries.append(_entry(t_c, feasible, counts))
         entries = _insert_entry(entries, _peak_entry(
             em, None if static_window == "t_constraint" else t_slice_ns))
@@ -611,51 +647,34 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
             return_stages=True))
         t_items_by_cluster[c.name] = t_items
 
-    def _dp_counts(t_ticks: int, min_e: float,
-                   k_opt: int) -> Tuple[bool, Dict[str, int]]:
-        """Backtrace one grid point over the op's stage tables."""
-        counts: Dict[str, int] = {}
-        if len(arch.clusters) == 2:
-            (n0, st0), (n1, st1) = stage_tables.items()
-            feasible = bool(k_opt >= 0 and np.isfinite(min_e))
-            if feasible:
-                k_hp = int(k_opt)
-                xs0 = backtrace_tables(st0, t_items_by_cluster[n0],
-                                       t_ticks, k_hp)
-                xs1 = backtrace_tables(st1, t_items_by_cluster[n1],
-                                       t_ticks, Kg - k_hp)
-                for cname, xs in ((n0, xs0), (n1, xs1)):
-                    for s, x in zip(arch.cluster(cname).spaces, xs):
-                        counts[s.name] = x
-            return feasible, counts
-        (n0, st0), = stage_tables.items()
-        feasible = bool(np.isfinite(st0[-1][t_ticks, Kg]))
-        if feasible:
-            xs0 = backtrace_tables(st0, t_items_by_cluster[n0], t_ticks, Kg)
-            for s, x in zip(arch.cluster(n0).spaces, xs0):
-                counts[s.name] = x
-        return feasible, counts
-
-    two = len(arch.clusters) == 2
-    if two and batched:
-        # Algorithm 2 over the full tables in one vectorized call; the
-        # per-point path below slices single rows out of the same tables.
-        finals = [st[-1] for st in stage_tables.values()]
-        min_e_all, k_opt_all = combine_clusters(finals[0], finals[1])
-    for t_c in t_grid:
-        t_ticks = int(t_c / tick_ns)
-        if two:
-            if batched:
-                min_e, k_opt = min_e_all[t_ticks], int(k_opt_all[t_ticks])
-            else:
-                finals = [st[-1] for st in stage_tables.values()]
-                m_e, k_o = combine_clusters(
-                    finals[0][t_ticks:t_ticks + 1],
-                    finals[1][t_ticks:t_ticks + 1])
-                min_e, k_opt = m_e[0], int(k_o[0])
+    finals = [stage_tables[c.name][-1] for c in arch.clusters]
+    t_ticks_all = [int(t_c / tick_ns) for t_c in t_grid]
+    if batched:
+        # Min-plus K-cluster combine (Algorithm 2 for K=2) over only the
+        # consulted tick rows in one vectorized call: the fold is
+        # row-local, so slicing the rows first is byte-identical to
+        # combining the full tables and indexing after. The per-point
+        # path below slices single rows out of the same tables.
+        rows = np.asarray(t_ticks_all)
+        min_e_all, splits_all = combine_many([f[rows] for f in finals])
+    for i, t_c in enumerate(t_grid):
+        t_ticks = t_ticks_all[i]
+        if batched:
+            min_e, split = min_e_all[i], splits_all[i]
         else:
-            min_e, k_opt = 0.0, 0       # unused in the 1-cluster branch
-        feasible, counts = _dp_counts(t_ticks, min_e, k_opt)
+            m_e, s_row = combine_many(
+                [f[t_ticks:t_ticks + 1] for f in finals])
+            min_e, split = m_e[0], s_row[0]
+        feasible = bool(np.isfinite(min_e))
+        counts: Dict[str, int] = {}
+        if feasible:
+            # per-cluster stage-table backtrace at that cluster's share
+            for c, k_c in zip(arch.clusters, split):
+                xs = backtrace_tables(stage_tables[c.name],
+                                      t_items_by_cluster[c.name],
+                                      t_ticks, int(k_c))
+                for s, x in zip(c.spaces, xs):
+                    counts[s.name] = x
         entries.append(_entry(t_c, feasible, counts))
     entries = _insert_entry(entries, _peak_entry(
         em, None if static_window == "t_constraint" else t_slice_ns))

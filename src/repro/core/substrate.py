@@ -22,6 +22,9 @@ one) - behind a string-keyed registry:
   ``gpu-pool-mixed`` same, heterogeneous fleet shapes (odd engines half)
   ``cxl-tier``       HP/LP node pools x {node-local DDR, CXL-attached}
                      residency (edge-to-cloud memory tiering)
+  ``cxl-tier-3``     THREE pools - HBM / node-DDR / CXL-attached far
+                     (DVFS-scaled) - solved through the K-pool
+                     min-plus combine (repro.core.multipool)
   ================== ==================================================
 
 Adding a backend is one :func:`register_substrate` call (DESIGN.md SS.5);
@@ -173,40 +176,56 @@ class ServePoolSubstrate(Substrate):
     are identical across pools."""
 
     supports_decode = True
-    #: names of the dataclass fields holding the (HP, LP) pool sizes
-    #: (chips / SM clusters / nodes); the shared fleet-shaping methods
-    #: below operate on whatever the subclass calls them.
+    #: names of the dataclass fields holding the pool sizes (chips / SM
+    #: clusters / nodes), one per cluster; the shared fleet-shaping
+    #: methods below operate on whatever - and however many - fields
+    #: the subclass declares (2 for the HP/LP pools, 3 for the
+    #: three-tier ``cxl-tier-3``).
     _POOL_FIELDS = ("n_hp", "n_lp")
 
-    def _pool_counts(self) -> Tuple[int, int]:
-        hp_f, lp_f = self._POOL_FIELDS
-        return getattr(self, hp_f), getattr(self, lp_f)
+    def _pool_counts(self) -> Tuple[int, ...]:
+        return tuple(getattr(self, f) for f in self._POOL_FIELDS)
 
-    def pool_plan(self, index: int) -> Tuple[int, int]:
-        """(HP, LP) pool sizes of fleet engine ``index``: ``mixed=True``
-        gives odd-indexed engines half of each pool (floored at 1)."""
-        hp, lp = self._pool_counts()
+    def pool_plan(self, index: int) -> Tuple[int, ...]:
+        """Per-cluster pool sizes of fleet engine ``index``:
+        ``mixed=True`` gives odd-indexed engines half of each pool
+        (floored at 1)."""
+        counts = self._pool_counts()
         if self.mixed and index % 2 == 1:
-            return (max(hp // 2, 1), max(lp // 2, 1))
-        return (hp, lp)
+            return tuple(max(c // 2, 1) for c in counts)
+        return counts
 
     def engine_variant(self, index: int) -> "ServePoolSubstrate":
-        hp, lp = self.pool_plan(index)
-        if (hp, lp) == self._pool_counts():
+        counts = self.pool_plan(index)
+        if counts == self._pool_counts():
             return self
-        hp_f, lp_f = self._POOL_FIELDS
         return dataclasses.replace(self, mixed=False,
-                                   **{hp_f: hp, lp_f: lp})
+                                   **dict(zip(self._POOL_FIELDS, counts)))
 
     def variant_key(self) -> tuple:
-        """(name, HP pool, LP pool[, lp_clock]) - pool sizes fully
-        determine the arch, plus the DVFS point where the pool has one
-        (engines at different DVFS points must not share a LUT)."""
+        """(name, *pool sizes[, lp_clock]) - pool sizes fully determine
+        the arch, plus the DVFS point where the pool has one (engines
+        at different DVFS points must not share a LUT)."""
         key = (self.name,) + self._pool_counts()
         lp_clock = getattr(self, "lp_clock", None)
         if lp_clock is not None:
             key += (round(lp_clock, 4),)
         return key
+
+    def tier_plan(self) -> Tuple[Tuple[str, str, str], ...]:
+        """Ordered ``(space_name, tier_name, format)`` triples driving
+        the serve engine's functional column split
+        (:mod:`repro.models.hetero_linear`). Default mapping: volatile
+        residency decodes in bf16, non-volatile residency in int8 (the
+        tpu/gpu pool convention - the legacy hp_bf16/.../lp_int8
+        order). CXL substrates override with int8/int8 tier pairs."""
+        plan = []
+        for c in self.arch.clusters:
+            for kind, fmt in (("sram", "bf16"), ("mram", "int8")):
+                for s in c.spaces:
+                    if s.mem.kind == kind:
+                        plan.append((s.name, f"{c.name}_{fmt}", fmt))
+        return tuple(plan)
 
     def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
         if isinstance(workload, sp.ModelSpec):
@@ -314,12 +333,12 @@ class CXLTierSubstrate(ServePoolSubstrate):
     refresh + PHY stay up while holding) versus standby power (the CXL
     expander powers down in retention when its pool idles, but every
     read pays the link premium). ``lp_clock`` scales the efficiency
-    pool's node clock exactly as on the GPU pools. Accounting-only: the
-    CXL tier has no functional decode engine, placement lives in the
-    energy/timing model (the CI substrate smoke and fleet accounting
-    paths exercise it; ``supports_decode`` stays False)."""
+    pool's node clock exactly as on the GPU pools. Decode-capable:
+    weights are INT8 in both tiers, so :meth:`tier_plan` maps every
+    space to an int8/int8 tier pair and a placement change re-tiers
+    real weight columns through ``HeteroServeEngine`` just like the
+    TPU/GPU pools (what moves is the column split, not the format)."""
 
-    supports_decode = False
     static_window = "t_slice"    # pinned-slice pools: see GPUPoolSubstrate
 
     name: str = "cxl-tier"
@@ -341,6 +360,68 @@ class CXLTierSubstrate(ServePoolSubstrate):
         object.__setattr__(self, "arch",
                            cxl_arch(self.n_hp_nodes, self.n_lp_nodes,
                                     lp_clock=self.lp_clock))
+
+    def tier_plan(self) -> Tuple[Tuple[str, str, str], ...]:
+        """INT8 in both residency tiers: DDR-local ("sram") and CXL-far
+        ("mram") spaces both decode through the W8A8 kernel, so a
+        placement change is a pure column move between int8 segments."""
+        tier = {"sram": "ddr", "mram": "cxl"}
+        plan = []
+        for c in self.arch.clusters:
+            for kind in ("sram", "mram"):
+                for s in c.spaces:
+                    if s.mem.kind == kind:
+                        plan.append((s.name,
+                                     f"{c.name}_{tier[kind]}_int8", "int8"))
+        return tuple(plan)
+
+
+@dataclasses.dataclass(frozen=True)
+class CXLTier3Substrate(ServePoolSubstrate):
+    """Three-tier memory hierarchy as three compute pools - HBM
+    accelerator nodes / node-DDR standard nodes / a DVFS-scaled far
+    pool behind the CXL link (``repro.serve.cxl.cxl_arch3``; after
+    Oliveira et al., PAPERS.md).
+
+    The first 3-cluster substrate: the LUT builders solve it through
+    the K-pool min-plus combine (:mod:`repro.core.multipool`,
+    DESIGN.md SS.7) on both the closed-form and the kernel-backed DP
+    path. Each pool anchors one residency tier, so the placement
+    decision is a genuine three-way split over the hierarchy: HBM
+    (fast, highest standby while holding), node DDR (mid), CXL far
+    memory (link premium per read, retention power-down when idle,
+    DVFS-scaled compute via ``lp_clock``). Decode-capable like
+    ``cxl-tier``: all three tiers are int8 segments, so placement
+    changes re-tier real weight columns."""
+
+    static_window = "t_slice"    # pinned-slice pools: see GPUPoolSubstrate
+
+    name: str = "cxl-tier-3"
+    n_hbm_nodes: int = 2
+    n_ddr_nodes: int = 4
+    n_cxl_nodes: int = 4
+    lp_clock: float = 0.5        # far-pool DVFS scale
+    tokens_per_task: int = 8
+    rho: float = 32.0
+    solver: str = "closed-form"
+    lut_points: int = 32
+    peak_tasks: int = workloads.PEAK_TASKS
+    mixed: bool = False
+    arch: sp.PIMArch = dataclasses.field(init=False, compare=False)
+
+    _POOL_FIELDS = ("n_hbm_nodes", "n_ddr_nodes", "n_cxl_nodes")
+
+    def __post_init__(self):
+        from repro.serve.cxl import cxl_arch3
+        object.__setattr__(self, "arch",
+                           cxl_arch3(self.n_hbm_nodes, self.n_ddr_nodes,
+                                     self.n_cxl_nodes,
+                                     lp_clock=self.lp_clock))
+
+    def tier_plan(self) -> Tuple[Tuple[str, str, str], ...]:
+        """One int8 tier per pool (hbm/ddr/cxl): a 3-way column split."""
+        return tuple((c.spaces[0].name, f"{c.name}_int8", "int8")
+                     for c in self.arch.clusters)
 
 
 # ---------------------------------------------------------------------------
@@ -415,6 +496,10 @@ def _cxl_factory(**kw) -> CXLTierSubstrate:
     return CXLTierSubstrate(**kw)
 
 
+def _cxl3_factory(**kw) -> CXLTier3Substrate:
+    return CXLTier3Substrate(**kw)
+
+
 register_substrate("tpu-pool", _tpu_factory("tpu-pool", mixed=False))
 register_substrate("tpu-pool-mixed",
                    _tpu_factory("tpu-pool-mixed", mixed=True))
@@ -422,3 +507,4 @@ register_substrate("gpu-pool", _gpu_factory("gpu-pool", mixed=False))
 register_substrate("gpu-pool-mixed",
                    _gpu_factory("gpu-pool-mixed", mixed=True))
 register_substrate("cxl-tier", _cxl_factory)
+register_substrate("cxl-tier-3", _cxl3_factory)

@@ -6,6 +6,8 @@ weight migration, SLO-aware routing with optional admission control.
 
     python -m repro.launch.fleet --trace mmpp --engines 2 --requests 32
     python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...
+    python -m repro.launch.fleet --substrate cxl-tier-3 \\
+        --compiler-stats --lut-cache ckpt/luts.json ...   # warm-start
 
 With ``--decode`` (default) every worker carries a real
 ``HeteroServeEngine``: each slice's placement is applied as an actual
@@ -49,14 +51,22 @@ def main(argv=None) -> None:
     ap.add_argument("--mixed", action="store_true",
                     help="heterogeneous pool: odd engines get half chips")
     ap.add_argument("--dvfs", type=float, default=None, metavar="SCALE",
-                    help="LP-pool DVFS frequency scale in (0, 1] "
-                         "(gpu-pool substrates only)")
+                    help="LP/far-pool DVFS frequency scale in (0, 1] "
+                         "(gpu-pool and cxl-tier substrates)")
     ap.add_argument("--tokens-per-task", type=int, default=2)
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--decode", dest="decode", action="store_true",
                     default=True)
     ap.add_argument("--no-decode", dest="decode", action="store_false")
+    ap.add_argument("--compiler-stats", action="store_true",
+                    help="report PlacementCompiler builds/hits/entries "
+                         "after the run")
+    ap.add_argument("--lut-cache", default=None, metavar="PATH",
+                    help="warm-start: load the placement-compiler LUT "
+                         "cache from PATH when it exists and save it back "
+                         "after the run (serialize next to checkpoints so "
+                         "a restarted fleet skips bring-up compiles)")
     ap.add_argument("--json", default=None,
                     help="write the summary to this path as JSON")
     ap.add_argument("--quiet", action="store_true")
@@ -76,10 +86,10 @@ def main(argv=None) -> None:
                                    else "tpu-pool")
     over = {"solver": args.solver} if args.solver else {}
     if args.dvfs is not None:
-        if not substrate.startswith("gpu-pool"):
-            raise SystemExit(f"--dvfs sets the LP-pool frequency scale of "
-                             f"the gpu-pool substrates; it does not apply "
-                             f"to --substrate {substrate}")
+        if not substrate.startswith(("gpu-pool", "cxl-tier")):
+            raise SystemExit(f"--dvfs sets the LP/far-pool frequency scale "
+                             f"of the gpu-pool and cxl-tier substrates; it "
+                             f"does not apply to --substrate {substrate}")
         over["lp_clock"] = args.dvfs
     if args.decode and not api.substrate(substrate).supports_decode:
         print(f"substrate {substrate} is accounting-only (no functional "
@@ -96,12 +106,21 @@ def main(argv=None) -> None:
         print(f"arch={canonical(args.arch)} ({cfg.n_layers}L "
               f"d={cfg.d_model}, reduced config)")
 
+    pc = None
+    if args.compiler_stats or args.lut_cache:
+        pc = api.compiler()
+        if args.lut_cache:
+            n = pc.load(args.lut_cache)
+            if n:
+                print(f"warm-start: loaded {n} cached LUTs from "
+                      f"{args.lut_cache}")
+
     fleet = api.fleet(
         substrate, cfg, n_engines=args.engines, forecaster=args.forecaster,
         policy=args.policy, tokens_per_task=args.tokens_per_task,
         admission_limit=args.admission_limit,
         forecast_margin=args.margin, params=params, decode=args.decode,
-        **over)
+        compiler=pc, **over)
 
     T_us = fleet.workers[0].t_slice_ns / 1e3
     print(f"fleet: {args.engines} engines on {substrate}"
@@ -132,6 +151,14 @@ def main(argv=None) -> None:
           f"{s.energy_per_token_uj:.2f} uJ/token over {s.tokens} tokens")
     print(f"placement {s.migrations} migrating slices, "
           f"{s.weights_moved} weights moved")
+    if pc is not None:
+        if args.lut_cache:
+            pc.save(args.lut_cache)
+            print(f"lut-cache: saved {len(pc)} LUTs to {args.lut_cache}")
+        if args.compiler_stats:
+            cs = pc.stats()
+            print(f"compiler  {cs['builds']} builds, {cs['hits']} hits, "
+                  f"{cs['entries']} cached LUTs")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(s.as_dict(), f, indent=2)

@@ -1,38 +1,56 @@
 """Tiered linear layers: the HH-PIM storage spaces realized on TPU.
 
-A weight matrix is split column-wise into four segments
-(hp_bf16 | hp_int8 | lp_bf16 | lp_int8) per the placement LUT. bf16
-segments are the "SRAM" tier (full-bandwidth reads); int8 segments are the
-"MRAM" tier (half the HBM bytes, W8A8 through the pim_mac kernel). The
-hp/lp pools differ in chips+clock in the energy model; functionally the
-math is identical, so outputs are placement-invariant up to int8
-quantization error.
+A weight matrix is split column-wise into per-tier segments according to
+the placement LUT. The legacy (tpu/gpu pool) mapping is four segments
+(hp_bf16 | hp_int8 | lp_bf16 | lp_int8): bf16 segments are the "SRAM"
+tier (full-bandwidth reads); int8 segments are the "MRAM" tier (half
+the HBM bytes, W8A8 through the pim_mac kernel). The hp/lp pools differ
+in chips+clock in the energy model; functionally the math is identical,
+so outputs are placement-invariant up to int8 quantization error.
+
+A substrate can supply its own tier naming and formats via the
+``formats`` mapping (see ``Substrate.tier_plan``): the CXL substrates
+use int8/int8 tier pairs (e.g. hp_ddr_int8 | hp_cxl_int8 | ...), where
+a placement change moves real weight columns between segments without
+a format change, and the three-tier ``cxl-tier-3`` splits into one
+int8 segment per pool (hbm_int8 | ddr_int8 | cxl_int8).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Mapping, Optional, Sequence
 
 import jax.numpy as jnp
 
 from repro.kernels.pim_mac.ops import pim_matmul
 from repro.quant.int8 import quantize_activations, quantize_per_channel
 
+#: legacy tpu/gpu pool tier order; also the default split order
 SPACES = ("hp_bf16", "hp_int8", "lp_bf16", "lp_int8")
 
 
-def split_weight(w: jnp.ndarray, counts: Dict[str, int]) -> Dict[str, dict]:
-    """Split (d_in, d_out) columns into tier segments per `counts`
-    (columns per space, summing to d_out). int8 tiers store (q, scale)."""
+def split_weight(w: jnp.ndarray, counts: Dict[str, int],
+                 formats: Optional[Mapping[str, str]] = None
+                 ) -> Dict[str, dict]:
+    """Split (d_in, d_out) columns into tier segments per ``counts``
+    (columns per tier, summing to d_out). int8 tiers store (q, scale).
+
+    Without ``formats`` the legacy 4-tier naming applies (``SPACES``
+    order, ``*_int8`` names quantized). With ``formats`` (tier ->
+    "bf16" | "int8") the split follows ``counts``' own (insertion)
+    order - the substrate's ``tier_plan`` order."""
     assert sum(counts.values()) == w.shape[1], (counts, w.shape)
+    order = SPACES if formats is None else tuple(counts)
     segs: Dict[str, dict] = {}
     off = 0
-    for name in SPACES:
+    for name in order:
         n = counts.get(name, 0)
         seg = w[:, off:off + n]
         off += n
+        fmt = (("int8" if name.endswith("int8") else "bf16")
+               if formats is None else formats[name])
         if n == 0:
             segs[name] = {"empty": True}
-        elif name.endswith("int8"):
+        elif fmt == "int8":
             q, s = quantize_per_channel(seg, axis=0)
             segs[name] = {"q": q, "scale": s}
         else:
@@ -42,21 +60,21 @@ def split_weight(w: jnp.ndarray, counts: Dict[str, int]) -> Dict[str, dict]:
 
 def tiered_matmul(x: jnp.ndarray, segs: Dict[str, dict],
                   backend: str = "ref") -> jnp.ndarray:
-    """x: (..., d_in) -> (..., d_out), concatenating tier outputs."""
+    """x: (..., d_in) -> (..., d_out), concatenating tier outputs in
+    the segments' split order (the dict's insertion order)."""
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     outs = []
     xq = sx = None
-    for name in SPACES:
-        seg = segs[name]
+    for name, seg in segs.items():
         if seg.get("empty"):
             continue
-        if name.endswith("int8"):
+        if "q" in seg:                       # int8 tier (W8A8 kernel)
             if xq is None:
                 xq, sx = quantize_activations(x2)
             y = pim_matmul(xq, seg["q"], sx, seg["scale"],
                            backend=backend, out_dtype=jnp.float32)
-        else:
+        else:                                # bf16 tier
             y = (x2.astype(jnp.bfloat16) @ seg["w"]).astype(jnp.float32)
         outs.append(y)
     y = jnp.concatenate(outs, axis=-1)
@@ -64,14 +82,16 @@ def tiered_matmul(x: jnp.ndarray, segs: Dict[str, dict],
 
 
 def fractions_to_counts(d_out: int, placement: Dict[str, int],
-                        total: int) -> Dict[str, int]:
-    """Scale a global weight-count placement to one matrix's columns."""
+                        total: int,
+                        order: Sequence[str] = SPACES) -> Dict[str, int]:
+    """Scale a global weight-count placement to one matrix's columns;
+    ``order`` is the tier split order (last tier absorbs rounding)."""
     counts = {}
     acc = 0
-    for name in SPACES[:-1]:
+    for name in order[:-1]:
         c = int(round(d_out * placement.get(name, 0) / max(total, 1)))
         c = min(c, d_out - acc)
         counts[name] = c
         acc += c
-    counts[SPACES[-1]] = d_out - acc
+    counts[order[-1]] = d_out - acc
     return counts

@@ -25,6 +25,12 @@ e_i)`` - so ``cxl_arch()`` builds a :class:`~repro.core.spaces.PIMArch`
 from the constants below and the whole placement stack runs unchanged.
 Constants are documented DDR5/CXL-1.1-class estimates per node.
 
+``cxl_arch3()`` deepens the hierarchy to THREE pools (HBM accelerator
+nodes / node-DDR standard nodes / a DVFS-scaled far pool behind the
+CXL link), each anchoring one residency tier - the first 3-cluster
+arch, solved through the K-pool min-plus combine
+(:mod:`repro.core.multipool`, DESIGN.md SS.7).
+
 This module is import-light on purpose (no jax): the substrate registry
 builds archs from it without pulling in the serving runtime.
 """
@@ -52,6 +58,29 @@ DDR_GB_PER_NODE = 32         # local capacity slice
 CXL_GB_PER_NODE = 128        # far-memory capacity slice
 
 LP_CLOCK = 0.5               # default clock scale of the efficiency pool
+
+# -- three-tier (cxl-tier-3) constants --------------------------------------
+# An accelerator-node pool whose weights sit in on-package HBM: the
+# fastest, most access-efficient tier, but the stack's PHY + controller
+# stay powered while it holds data (volatile, like local DDR).
+HBM_BW = 819e9               # B/s per node (HBM2e-class stack share)
+HBM_PJ_PER_BYTE = 5.0        # on-package access energy
+HBM_GB_PER_NODE = 16         # HBM capacity slice per node
+# Three-tier statics model only the INCREMENTAL cost of pinning a
+# residency tier on - the refresh + PHY share attributable to the held
+# weight shard (a model is a sliver of a 16-128 GB tier), not
+# whole-channel idle draw. Same rationale as repro.serve.gpu.IDLE_W:
+# the placement trade must stay dynamic-dominated for the paper's
+# dynamic-only DP to remain near-optimal - the multipool
+# dp-vs-closed-form CI gate holds at <= ~1% deviation with identical
+# deadline behaviour in this regime (it degrades to ~10% with
+# whole-channel statics, where the statics-aware closed-form argmin
+# departs from the DP's in the near-tie mid-constraint region).
+# (DDR_IDLE_W above stays as the 2-pool cxl-tier's whole-channel
+# constant for LUT compatibility.)
+HBM_PIN_W = 0.2              # stack PHY + refresh share of the shard
+DDR_PIN_W = 0.15             # channel refresh + PHY share while holding
+CXL_RETENTION_W = 0.05       # expander retention power-down
 
 
 def _mem(kind: str, energy: float) -> sp.MemorySpec:
@@ -99,3 +128,55 @@ def cxl_arch(n_hp_nodes: int = 4, n_lp_nodes: int = 4, *,
     hp = dataclasses.replace(hp, spaces=spaces_for(hp, 1.0))
     lp = dataclasses.replace(lp, spaces=spaces_for(lp, lp_energy))
     return sp.PIMArch("cxl_tier", (hp, lp))
+
+
+def _tier_mem(kind: str, bw: float, pj_byte: float, cap_gb: int,
+              static_w: float, energy: float) -> sp.MemorySpec:
+    """One residency tier of the three-tier hierarchy. ``kind`` carries
+    the volatility semantics the placement engine keys on: ``sram`` =
+    stays powered while holding (HBM stack / DDR refresh+PHY), ``mram``
+    = retention power-down when the pool idles (CXL expander)."""
+    read_ns = 1.0 / bw * 1e9
+    return sp.MemorySpec(
+        kind, read_ns=read_ns, write_ns=4 * read_ns,
+        read_mw=pj_byte / read_ns, write_mw=pj_byte / (2 * read_ns),
+        static_mw=static_w * 1e3 * energy,       # W -> mW
+        volatile=(kind == "sram"),
+        capacity_bytes=cap_gb * 2 ** 30)
+
+
+def cxl_arch3(n_hbm_nodes: int = 2, n_ddr_nodes: int = 4,
+              n_cxl_nodes: int = 4, *,
+              lp_clock: float = LP_CLOCK) -> sp.PIMArch:
+    """Three-tier memory hierarchy as THREE compute pools: an HBM pool
+    (accelerator nodes, on-package residency), a node-DDR pool (standard
+    nodes, local-DDR residency) and a DVFS-scaled far pool behind the
+    CXL link (expander residency, retention power-down when idle).
+
+    Each pool anchors one residency tier, so placement across the
+    hierarchy is a genuine 3-cluster split - the first substrate to
+    exercise the K-pool min-plus combine
+    (:mod:`repro.core.multipool`). Every pool reads activations from a
+    node-local DDR I/O buffer (the cross-tier analogue of the SRAM I/O
+    role in the edge archs)."""
+    far_energy = dvfs_energy_scale(lp_clock)
+
+    def pool(name: str, n: int, clock: float, energy: float,
+             mem: sp.MemorySpec) -> sp.ClusterSpec:
+        c = sp.ClusterSpec(name, _pe(clock, energy), n, ())
+        io = _tier_mem("sram", DDR_BW, DDR_PJ_PER_BYTE, DDR_GB_PER_NODE,
+                       DDR_PIN_W, energy)      # node-local activation path
+        space = sp.StorageSpace(f"{name}_{mem.kind}", name, mem, io,
+                                c.pe, c.n_modules)
+        return dataclasses.replace(c, spaces=(space,))
+
+    hbm = pool("hbm", n_hbm_nodes, 1.0, 1.0,
+               _tier_mem("sram", HBM_BW, HBM_PJ_PER_BYTE,
+                         HBM_GB_PER_NODE, HBM_PIN_W, 1.0))
+    ddr = pool("ddr", n_ddr_nodes, 1.0, 1.0,
+               _tier_mem("sram", DDR_BW, DDR_PJ_PER_BYTE,
+                         DDR_GB_PER_NODE, DDR_PIN_W, 1.0))
+    cxl = pool("cxl", n_cxl_nodes, lp_clock, far_energy,
+               _tier_mem("mram", CXL_BW, CXL_PJ_PER_BYTE,
+                         CXL_GB_PER_NODE, CXL_RETENTION_W, far_energy))
+    return sp.PIMArch("cxl_tier3", (hbm, ddr, cxl))

@@ -81,8 +81,13 @@ def tpu_arch(n_hp_chips: int = 4, n_lp_chips: int = 4) -> sp.PIMArch:
     return sp.PIMArch("tpu_hetero", (hp, lp))
 
 
-_SPACE_TO_TIER = {"hp_sram": "hp_bf16", "hp_mram": "hp_int8",
-                  "lp_sram": "lp_bf16", "lp_mram": "lp_int8"}
+# legacy tpu/gpu mapping, kept as the engine fallback when a substrate
+# does not publish a tier_plan(): (space, tier, format) in split order
+_DEFAULT_TIER_PLAN = (("hp_sram", "hp_bf16", "bf16"),
+                      ("hp_mram", "hp_int8", "int8"),
+                      ("lp_sram", "lp_bf16", "bf16"),
+                      ("lp_mram", "lp_int8", "int8"))
+_SPACE_TO_TIER = {s: t for s, t, _ in _DEFAULT_TIER_PLAN}
 
 
 def default_t_slice_ms(arch: sp.PIMArch, model: sp.ModelSpec, *,
@@ -156,6 +161,11 @@ class HeteroServeEngine:
             lut_points=32 if lut_points is None else lut_points,
             compiler=compiler)
         self.max_batch = max_batch
+        # substrate-declared (space, tier, format) split order: the cxl
+        # substrates re-tier int8/int8 pairs, cxl-tier-3 a 3-way int8
+        # split; tpu/gpu pools keep the legacy bf16/int8 mapping
+        plan = getattr(substrate, "tier_plan", None)
+        self._tier_plan = tuple(plan()) if plan else _DEFAULT_TIER_PLAN
         self._tiered: Optional[Dict] = None
         self._tiered_placement: Optional[Dict[str, int]] = None
         self._toks = jnp.zeros((max_batch,), jnp.int32)
@@ -168,6 +178,9 @@ class HeteroServeEngine:
         if placement == self._tiered_placement:
             return False
         K = self.model_spec.n_params
+        space_to_tier = {s: t for s, t, _ in self._tier_plan}
+        formats = {t: f for _, t, f in self._tier_plan}
+        order = tuple(t for _, t, _ in self._tier_plan)
         tiers = {}
         stack = self.params["stack"]
         for lname, layer in stack.items():
@@ -180,12 +193,11 @@ class HeteroServeEngine:
                 w = ffn[wname]
                 counts = fractions_to_counts(
                     w.shape[-1],
-                    {_SPACE_TO_TIER[k]: v for k, v in placement.items()},
-                    K)
+                    {space_to_tier[k]: v for k, v in placement.items()},
+                    K, order=order)
                 tiers[(lname, wname)] = split_weight(
                     jnp.asarray(w, jnp.float32),
-                    {t: counts.get(t, 0) for t in
-                     ("hp_bf16", "hp_int8", "lp_bf16", "lp_int8")})
+                    {t: counts.get(t, 0) for t in order}, formats=formats)
         self._tiered = tiers
         self._tiered_placement = dict(placement)
         return True

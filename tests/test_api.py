@@ -17,6 +17,7 @@ EDGE_SUBSTRATES = ("edge-hhpim", "edge-hetero", "edge-hybrid",
                    "edge-baseline")
 TPU_SUBSTRATES = ("tpu-pool", "tpu-pool-mixed")
 GPU_SUBSTRATES = ("gpu-pool", "gpu-pool-mixed")
+CXL_SUBSTRATES = ("cxl-tier", "cxl-tier-3")
 FIXED_SOLVERS = ("fixed-baseline", "fixed-hetero", "fixed-hybrid")
 
 
@@ -32,7 +33,8 @@ def _legacy(arch, model, T, **kw):
 def test_registries_cover_issue_contract():
     assert set(api.SUBSTRATES) >= (set(EDGE_SUBSTRATES)
                                    | set(TPU_SUBSTRATES)
-                                   | set(GPU_SUBSTRATES))
+                                   | set(GPU_SUBSTRATES)
+                                   | set(CXL_SUBSTRATES))
     assert set(api.SOLVERS) >= {"dp", "closed-form", *FIXED_SOLVERS}
     with pytest.raises(ValueError):
         api.substrate("edge-nope")

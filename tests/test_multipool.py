@@ -1,0 +1,355 @@
+"""K-pool placement tests (repro.core.multipool + cxl-tier-3).
+
+Three layers of evidence that the min-plus multi-cluster combine is
+right:
+
+  * an exhaustive brute-force oracle at small K/grid (K=3 clusters,
+    <= 12 weights) agreeing with ``combine_many`` on both the energy
+    and the backtraced split,
+  * an exact reduction proof for C == 2: ``combine_many`` reproduces
+    the pairwise Algorithm-2 scan bit-for-bit,
+  * a golden-digest regression: every substrate registered before the
+    refactor builds byte-identical LUTs through the new combine (the
+    digests below were captured from the pre-refactor tree).
+
+Plus the end-to-end exercise: the three-pool ``cxl-tier-3`` substrate
+builds LUTs via both solver methods, agrees dp-vs-closed-form, and runs
+a fleet slice.
+"""
+import hashlib
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import spaces as sp
+from repro.core import workloads
+from repro.core.energy import EnergyModel, validate_placement
+from repro.core.multipool import combine_many, minplus_fold
+from repro.core.placement import (ClosedFormSolver, build_lut,
+                                  combine_clusters, dp_min_energy)
+
+
+# ---------------------------------------------------------------------------
+# combine_many vs exhaustive brute force (K=3 clusters, <= 12 weights)
+# ---------------------------------------------------------------------------
+
+
+def _random_cluster_tables(rng, C, K, T):
+    """Per-cluster final DP tables from the float64 oracle."""
+    tabs = []
+    for _ in range(C):
+        n = int(rng.integers(1, 3))
+        t_it = rng.integers(1, 6, n).tolist()
+        e_it = rng.uniform(0.1, 20.0, n).tolist()
+        dp, _ = dp_min_energy(t_it, e_it, T, K)
+        tabs.append(dp[n])
+    return tabs
+
+
+def test_combine_many_matches_bruteforce_k3():
+    rng = np.random.default_rng(7)
+    for trial in range(120):
+        C, K = 3, int(rng.integers(1, 13))
+        T = int(rng.integers(0, 22))
+        tabs = _random_cluster_tables(rng, C, K, T)
+        min_e, splits = combine_many(tabs)
+        for t in (0, T // 2, T):
+            best = float("inf")
+            for ks in itertools.product(range(K + 1), repeat=C):
+                if sum(ks) != K:
+                    continue
+                best = min(best, sum(tabs[c][t, ks[c]] for c in range(C)))
+            got = min_e[t]
+            if np.isinf(best):
+                assert np.isinf(got)
+                assert (splits[t] == -1).all()
+            else:
+                assert got == pytest.approx(best, rel=1e-12)
+                s = splits[t]
+                assert int(s.sum()) == K and (s >= 0).all()
+                # the split recomposes exactly the reported optimum
+                recomposed = sum(tabs[c][t, s[c]] for c in range(C))
+                assert recomposed == got
+
+
+def test_combine_many_deep_fold_k5():
+    """Several intermediate folds (C=5) still match brute force."""
+    rng = np.random.default_rng(3)
+    for trial in range(20):
+        C, K = 5, int(rng.integers(1, 7))
+        T = int(rng.integers(1, 15))
+        tabs = _random_cluster_tables(rng, C, K, T)
+        min_e, splits = combine_many(tabs)
+        best = float("inf")
+        for ks in itertools.product(range(K + 1), repeat=C):
+            if sum(ks) != K:
+                continue
+            best = min(best, sum(tabs[c][T, ks[c]] for c in range(C)))
+        if np.isinf(best):
+            assert np.isinf(min_e[T])
+        else:
+            assert min_e[T] == pytest.approx(best, rel=1e-12)
+            assert int(splits[T].sum()) == K
+
+
+def test_combine_many_two_tables_is_pairwise_algorithm2():
+    """C == 2 degenerates to exactly the historic pairwise scan: same
+    additions, same first-minimum argmin, bit-for-bit."""
+    rng = np.random.default_rng(11)
+    for trial in range(40):
+        K = int(rng.integers(0, 9))
+        T = int(rng.integers(0, 25))
+        a, b = _random_cluster_tables(rng, 2, K, T)
+        min_e, splits = combine_many([a, b])
+        # the pre-refactor pairwise formula, verbatim
+        total = a + b[:, ::-1]
+        k_opt = np.argmin(total, axis=1)
+        ref_e = total[np.arange(T + 1), k_opt]
+        ref_k = np.where(np.isinf(ref_e), -1, k_opt)
+        np.testing.assert_array_equal(min_e, ref_e)
+        np.testing.assert_array_equal(splits[:, 0], ref_k)
+        feas = np.isfinite(ref_e)
+        np.testing.assert_array_equal(splits[feas, 1], K - ref_k[feas])
+        # and the named Algorithm-2 API delegates to the same fold
+        ce, ck = combine_clusters(a, b)
+        np.testing.assert_array_equal(ce, ref_e)
+        np.testing.assert_array_equal(ck, ref_k)
+
+
+def test_combine_many_single_cluster():
+    dp, _ = dp_min_energy([2], [3.0], 10, 4)
+    min_e, splits = combine_many([dp[1]])
+    assert np.isinf(min_e[7])                # 4 items need t >= 8
+    assert (splits[7] == -1).all()
+    assert min_e[8] == pytest.approx(12.0)
+    assert splits[8].tolist() == [4]
+
+
+def test_minplus_fold_properties():
+    rng = np.random.default_rng(5)
+    a, b = _random_cluster_tables(rng, 2, 6, 12)
+    out, arg = minplus_fold(a, b)
+    R, K1 = a.shape
+    for r in range(0, R, 3):
+        for k in range(K1):
+            want = min(a[r, i] + b[r, k - i] for i in range(k + 1))
+            if np.isinf(want):
+                assert np.isinf(out[r, k])
+            else:
+                assert out[r, k] == want
+                i = arg[r, k]
+                assert a[r, i] + b[r, k - i] == out[r, k]
+
+
+# ---------------------------------------------------------------------------
+# Byte-identity regression: pre-refactor substrates, golden digests
+# ---------------------------------------------------------------------------
+
+# Captured from the seed tree (pre-multipool pairwise combine) with the
+# exact build parameters below: every pre-existing 1-/2-cluster
+# substrate must keep producing these bytes through the K-pool fold.
+GOLDEN_LUT_DIGESTS = {
+    "cxl-tier:closed_form": "3653af7c0d0569cb",
+    "cxl-tier:dp": "549a9fef6ae223b4",
+    "edge-baseline:closed_form": "f76a5f3c6ead009a",
+    "edge-baseline:dp": "f76a5f3c6ead009a",
+    "edge-hetero:closed_form": "cda0ae1977f42590",
+    "edge-hetero:dp": "cda0ae1977f42590",
+    "edge-hhpim:closed_form": "c44f42c135341f75",
+    "edge-hhpim:dp": "c44f42c135341f75",
+    "edge-hybrid:closed_form": "02f9711c2b0627e2",
+    "edge-hybrid:dp": "847c8c5fc106581b",
+    "gpu-pool:closed_form": "5bbccc0162bc4de2",
+    "gpu-pool:dp": "5bbccc0162bc4de2",
+    "gpu-pool-mixed:closed_form": "5bbccc0162bc4de2",
+    "gpu-pool-mixed:dp": "5bbccc0162bc4de2",
+    "tpu-pool:closed_form": "90c5bdf20b5fec46",
+    "tpu-pool:dp": "abee1aab40e12410",
+    "tpu-pool-mixed:closed_form": "90c5bdf20b5fec46",
+    "tpu-pool-mixed:dp": "abee1aab40e12410",
+}
+
+
+def lut_digest(lut):
+    """Canonical bit-exact digest of a LUT (float bytes via hex)."""
+    payload = []
+    for e in lut.entries:
+        payload.append([e.t_constraint_ns.hex(),
+                        sorted((k, int(v)) for k, v in e.placement.items()),
+                        float(e.e_task_pj).hex(), float(e.t_task_ns).hex(),
+                        bool(e.feasible)])
+    blob = json.dumps([lut.arch_name, lut.model_name, payload],
+                      sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]
+
+
+@pytest.mark.parametrize("key", sorted(GOLDEN_LUT_DIGESTS))
+def test_preexisting_substrate_luts_unchanged_by_kpool_refactor(key):
+    name, method = key.split(":")
+    sub = api.substrate(name)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    em = sub.energy_model(model)
+    lut = build_lut(sub.arch, model, t_slice_ns=T, n_points=6,
+                    k_groups=64, em=em, method=method,
+                    static_window=sub.static_window)
+    assert lut_digest(lut) == GOLDEN_LUT_DIGESTS[key], key
+
+
+# ---------------------------------------------------------------------------
+# cxl-tier-3: the three-pool substrate end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_cxl_tier_3_registered():
+    # ISSUE acceptance: picked up by substrate-smoke via the registry
+    assert "cxl-tier-3" in api.list_substrates()
+    sub = api.substrate("cxl-tier-3")
+    assert len(sub.arch.clusters) == 3
+    assert [c.name for c in sub.arch.clusters] == ["hbm", "ddr", "cxl"]
+
+
+@pytest.mark.parametrize("solver", ["closed-form", "dp"])
+def test_cxl_tier_3_builds_valid_luts_both_solvers(solver):
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    lut = sub.build_lut(model, t_slice_ns=T, n_points=8, solver=solver)
+    feas = [e for e in lut.entries if e.feasible]
+    assert feas, solver
+    em = sub.energy_model(model)
+    for e in feas:
+        validate_placement(sub.arch, model, e.placement)
+        assert em.task_cost(e.placement).t_task_ns <= e.t_constraint_ns + 1e-6
+    # tight constraint engages all three pools; relaxed parks everything
+    # in the far (CXL) tier, whose idle cost is retention power-down
+    assert sum(v > 0 for v in feas[0].placement.values()) == 3
+    assert feas[-1].placement.get("cxl_mram", 0) == model.n_params
+
+
+def test_cxl_tier_3_dp_and_closed_form_agree():
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    loads = workloads.SCENARIOS["case6_random"]
+    res = {}
+    for solver in ("closed-form", "dp"):
+        sched = api.scheduler(sub, model, t_slice_ns=T, lut_points=16,
+                              solver=solver)
+        reports = sched.run(loads)
+        res[solver] = (sum(r.energy_pj for r in reports),
+                       sum(not r.deadline_met for r in reports))
+    cf, dp = res["closed-form"], res["dp"]
+    assert dp[1] == cf[1]
+    assert dp[0] == pytest.approx(cf[0], rel=0.10)
+
+
+def test_cxl_tier_3_closed_form_matches_simplex_bruteforce():
+    """The K-pool closed-form optimum equals exhaustive search over the
+    per-cluster split simplex (small group grid, full energy model)."""
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    em = sub.energy_model(model)
+    t_peak = em.task_cost(em.peak_placement(True)).t_task_ns
+    Kg = 12
+    group = -(-model.n_params // Kg)
+    solver = ClosedFormSolver(em, group=group)
+    for frac in (0.9, 0.4, 0.1):
+        t_budget = t_peak / frac
+        sols = [solver.solve_cluster(c, Kg, t_budget, t_budget)
+                for c in sub.arch.clusters]
+        min_e, splits = combine_many([s.energy_pj[None, :] for s in sols])
+        brute = min(
+            (sum(sols[c].energy_pj[ks[c]] for c in range(3))
+             for ks in itertools.product(range(Kg + 1), repeat=3)
+             if sum(ks) == Kg), default=float("inf"))
+        assert min_e[0] == pytest.approx(brute, rel=1e-12)
+        assert int(splits[0].sum()) == Kg
+
+
+def test_cxl_tier_3_peak_placement_spans_all_pools():
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    em = sub.energy_model(model)
+    pl = em.peak_placement(sram_only=True)
+    assert sum(pl.values()) == model.n_params
+    assert set(pl) == {"hbm_sram", "ddr_sram", "cxl_mram"}
+    assert all(v > 0 for v in pl.values())
+    # balanced makespan: faster pools take proportionally more weights
+    em_cost = em.task_cost(pl)
+    busy = list(em_cost.t_cluster_ns.values())
+    assert max(busy) <= min(b for b in busy if b > 0) * 1.10
+
+
+def test_far_only_cluster_closed_form_matches_manual():
+    """The far-tier-only branch of ClosedFormSolver (single non-volatile
+    space) reproduces the hand-computed linear cost."""
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    model = sub.model_spec()
+    em = sub.energy_model(model)
+    cxl = sub.arch.cluster("cxl")
+    solver = ClosedFormSolver(em, group=1)
+    K = 16
+    tw = em.weight_time_ns(cxl.spaces[0])
+    budget = 10.5 * tw                      # k <= 10 feasible
+    sol = solver.solve_cluster(cxl, K, budget, budget)
+    for k in range(K + 1):
+        busy = k * tw
+        if k <= 10:
+            want = (k * em.weight_energy_pj(cxl.spaces[0])
+                    + (cxl.spaces[0].static_mw_total
+                       + cxl.pe_static_mw_total) * busy if k else 0.0)
+            assert sol.energy_pj[k] == pytest.approx(want, rel=1e-12)
+            assert sol.x_mram[k] == k
+            assert sol.busy_ns[k] == pytest.approx(busy)
+        else:
+            assert np.isinf(sol.energy_pj[k])
+    # batched rows are bit-identical to the per-point solve
+    batch = solver.solve_clusters(cxl, K, [budget, 2 * budget],
+                                  [budget, 2 * budget])
+    np.testing.assert_array_equal(batch.energy_pj[0], sol.energy_pj)
+    np.testing.assert_array_equal(batch.x_mram[0], sol.x_mram)
+
+
+def test_cxl_tier_3_fleet_slice_and_mixed_shaping():
+    from repro.fleet import summarize
+    from repro.fleet.traces import replay_trace
+    pc = api.compiler()
+    fl = api.fleet("cxl-tier-3", n_engines=2, forecaster="none",
+                   compiler=pc)
+    s = summarize(fl.run(replay_trace([4, 2, 4])))
+    assert s.n_completed == 10
+    assert s.energy_uj > 0
+    assert pc.stats()["builds"] == 1        # one shape -> one build
+    # mixed shaping halves every one of the THREE pools
+    sub = api.substrate("cxl-tier-3", mixed=True)
+    small = sub.engine_variant(1)
+    assert small._pool_counts() == tuple(max(c // 2, 1)
+                                         for c in sub._pool_counts())
+    assert small.variant_key() != sub.variant_key()
+
+
+def test_compiler_cache_roundtrip_warm_start(tmp_path):
+    """save()/load() round-trips the LUT cache exactly: a restarted
+    fleet's bring-up compiles are all served from cache."""
+    path = tmp_path / "luts.json"
+    pc = api.compiler()
+    sub = api.substrate("cxl-tier-3", tokens_per_task=2)
+    variants = [sub.engine_variant(i) for i in range(2)]
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    luts = pc.compile(variants, model, t_slice_ns=T, n_points=6)
+    assert pc.stats()["builds"] == 1
+    pc.save(path)
+
+    pc2 = api.compiler()
+    assert pc2.load(path) == 1
+    again = pc2.compile(variants, model, t_slice_ns=T, n_points=6)
+    assert pc2.stats()["builds"] == 0       # fully warm
+    for key, lut in luts.items():
+        assert again[key].entries == lut.entries    # exact round-trip
+    # loading a missing file is a cold start, not an error
+    assert api.compiler().load(tmp_path / "nope.json") == 0

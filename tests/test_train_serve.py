@@ -272,6 +272,30 @@ def test_tiered_matmul_matches_dense():
     assert rel < 0.08
 
 
+def test_tiered_matmul_custom_int8_tiers_matches_dense():
+    """Substrate-declared tier plans (the cxl int8/int8 pairs and the
+    3-way cxl-tier-3 split) flow through split_weight/tiered_matmul via
+    the formats mapping."""
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.normal(0, 0.5, (24, 48)), jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1, (3, 24)), jnp.float32)
+    counts = {"hbm_int8": 20, "ddr_int8": 16, "cxl_int8": 12}
+    formats = {t: "int8" for t in counts}
+    segs = split_weight(w, counts, formats=formats)
+    assert set(segs) == set(counts)
+    assert all("q" in s for s in segs.values())     # all-int8 tiers
+    y = tiered_matmul(x, segs)
+    ref = x @ w
+    rel = float(jnp.abs(y - ref).max() / jnp.abs(ref).max())
+    assert rel < 0.08
+    # re-tiering = moving columns between int8 segments: same math
+    moved = split_weight(w, {"hbm_int8": 4, "ddr_int8": 4, "cxl_int8": 40},
+                         formats=formats)
+    y2 = tiered_matmul(x, moved)
+    rel2 = float(jnp.abs(y2 - ref).max() / jnp.abs(ref).max())
+    assert rel2 < 0.08
+
+
 def test_tiered_all_bf16_is_near_exact():
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.normal(0, 0.5, (16, 24)), jnp.float32)
