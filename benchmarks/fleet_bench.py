@@ -13,10 +13,14 @@ story: consulting the placement LUT on a *forecast* of next-slice load
 traffic - lower deadline-miss-rate at a modest energy-per-token premium.
 
 Run: ``PYTHONPATH=src python -m benchmarks.fleet_bench`` (or
-``python benchmarks/fleet_bench.py``).
+``python benchmarks/fleet_bench.py``). ``--trace [PATH]`` records the
+whole sweep through the observability layer (repro.obs) and writes
+Perfetto-loadable trace/metrics JSON; ``--flight-recorder [PATH]`` arms
+the SLO-breach recorder over the sweep's fleets.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
@@ -24,7 +28,7 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.fleet import summarize
 from repro.fleet.traces import BURSTY, make_trace
 
@@ -118,7 +122,30 @@ def fleet_sweep() -> Tuple[List[Dict], Dict]:
     return rows, derived
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--trace", nargs="?", const="fleet_bench_trace.json",
+                    default=None, metavar="PATH",
+                    help="record the sweep through repro.obs and write "
+                         "Chrome trace-event JSON to PATH (+ metrics.json "
+                         "alongside)")
+    ap.add_argument("--flight-recorder", nargs="?",
+                    const="fleet_bench_flight.json", default=None,
+                    metavar="PATH",
+                    help="arm the SLO-breach flight recorder over the "
+                         "sweep's fleet runs")
+    ap.add_argument("--miss-threshold", type=float, default=0.5)
+    args = ap.parse_args(argv)
+
+    if args.trace is not None or args.flight_recorder is not None:
+        obs.reset()
+        rec = None
+        if args.flight_recorder is not None:
+            rec = obs.FlightRecorder(
+                capacity=64, miss_rate_threshold=args.miss_threshold,
+                path=args.flight_recorder)
+        obs.enable(flight_recorder=rec)
+
     out_dir = Path(__file__).parent / "results"
     out_dir.mkdir(exist_ok=True)
     t0 = time.perf_counter()
@@ -132,6 +159,16 @@ def main() -> None:
         print(f"  {r['trace']:8s} x{r['engines']} {r['forecaster']:5s} "
               f"miss={r['miss_rate']:.3f} p95={r['p95_us']:.2f}us "
               f"e/tok={r['energy_per_token_uj']:.2f}uJ")
+    if args.trace is not None:
+        paths = obs.export(
+            trace_path=args.trace,
+            metrics_path=Path(args.trace).with_name("metrics.json"))
+        print(f"wrote {paths['trace']} ({len(obs.tracer())} events) "
+              f"and {paths['metrics']}")
+    rec = obs.flight_recorder()
+    if rec is not None:
+        print(f"flight-recorder: {rec.n_dumps} dump(s), "
+              f"{len(rec)} frames buffered")
 
 
 if __name__ == "__main__":

@@ -426,6 +426,84 @@ def lut_build() -> Tuple[List[Dict], Dict]:
     return rows, derived
 
 
+def obs_overhead() -> Tuple[List[Dict], Dict]:
+    """Observability overhead on the fleet hot loop (DESIGN.md SS.8).
+
+    The GATED number is the disabled-mode cost - what every production
+    run pays for having the instrumentation compiled in: each site is
+    one ``obs.enabled()`` predicate. We count how many guard calls one
+    fleet run executes (a counting stub that still returns False, so
+    the run stays uninstrumented), microbenchmark the guard, and gate
+    the projected overhead vs the disabled run at <= 5%.
+
+    The fully-enabled cost (spans + counters + flight recorder) is
+    recorded as ``tracer_overhead_pct`` for the trajectory but not
+    gated: on this *analytic* fleet a slice is ~100 us of numpy, a
+    near-worst case for relative tracing cost; enable tracing to
+    diagnose, not during perf sweeps.
+    """
+    from repro import obs
+    from repro.fleet import make_trace, summarize
+
+    REPS, N_SLICES, ENGINES = 3, 40, 2
+    pc = api.compiler()
+    trace = make_trace("mmpp", n_slices=N_SLICES, seed=0,
+                       rate_low=2 * ENGINES, rate_high=12 * ENGINES)
+
+    def one_run() -> float:
+        fleet = api.fleet("tpu-pool", n_engines=ENGINES,
+                          forecaster="ewma", compiler=pc)
+        t0 = time.perf_counter()
+        summarize(fleet.run(trace))
+        return (time.perf_counter() - t0) * 1e3
+
+    obs.reset()
+    one_run()                               # warm-up: LUT build + caches
+    base_ms = min(one_run() for _ in range(REPS))
+
+    # disabled-mode guard accounting: count predicates, price one
+    n_guards = 0
+    real_enabled = obs.enabled
+
+    def counting_enabled() -> bool:
+        nonlocal n_guards
+        n_guards += 1
+        return False
+
+    obs.enabled = counting_enabled
+    try:
+        one_run()
+    finally:
+        obs.enabled = real_enabled
+    N = 100_000
+    t0 = time.perf_counter()
+    for _ in range(N):
+        real_enabled()
+    guard_ns = (time.perf_counter() - t0) / N * 1e9
+    disabled_pct = 100.0 * (n_guards * guard_ns / 1e6) / base_ms
+
+    obs.enable(flight_recorder=obs.FlightRecorder(
+        capacity=32, miss_rate_threshold=2.0))   # record, never dump
+    traced_ms = min(one_run() for _ in range(REPS))
+    n_events = len(obs.tracer())
+    obs.reset()
+
+    rows = [{"mode": "disabled", "ms": round(base_ms, 3)},
+            {"mode": "traced", "ms": round(traced_ms, 3)}]
+    derived = {
+        "baseline_ms": round(base_ms, 3),
+        "traced_ms": round(traced_ms, 3),
+        "tracer_overhead_pct": round(
+            100.0 * (traced_ms - base_ms) / base_ms, 2),
+        "trace_events": n_events,
+        "guard_calls_per_run": n_guards,
+        "guard_ns": round(guard_ns, 1),
+        "disabled_overhead_pct": round(disabled_pct, 3),
+        "overhead_ok": bool(disabled_pct <= 5.0),
+    }
+    return rows, derived
+
+
 ALL = {
     "table3_latency": table3_latency,
     "table5_power": table5_power,
@@ -437,4 +515,5 @@ ALL = {
     "pool_substrates": pool_substrates,
     "multipool": multipool,
     "lut_build": lut_build,
+    "obs_overhead": obs_overhead,
 }

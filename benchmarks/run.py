@@ -25,10 +25,10 @@ from benchmarks import paper_tables
 
 # cheap-enough-for-every-PR subset: the per-space constants table, the
 # three solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools,
-# the 3-pool cxl-tier-3 min-plus combine) and the placement-compiler
-# throughput suite
+# the 3-pool cxl-tier-3 min-plus combine), the placement-compiler
+# throughput suite and the observability-overhead check
 QUICK = ("table5_power", "solver_agreement", "pool_substrates",
-         "multipool", "lut_build")
+         "multipool", "lut_build", "obs_overhead")
 
 # name -> (flag inside the table's derived dict that must be true)
 GATES = {
@@ -36,7 +36,23 @@ GATES = {
     "pool_substrates": "gpu_solver_agreement_ok",
     "multipool": "cxl3_solver_agreement_ok",
     "lut_build": "speedup_ok",
+    "obs_overhead": "overhead_ok",
 }
+
+
+def write_trajectory(derived_all: dict, path: Path) -> None:
+    """The stable perf-trajectory point: suite -> scalar metrics only
+    (committed as a top-level BENCH_fleet.json so future PRs diff their
+    numbers against this baseline). Non-scalar derived values (lists,
+    per-cell dicts) are dropped - the schema must stay diffable."""
+    flat = {}
+    for suite, derived in derived_all.items():
+        scalars = {k: v for k, v in derived.items()
+                   if isinstance(v, (int, float, bool))}
+        if scalars:
+            flat[suite] = scalars
+    payload = {"schema": "bench-trajectory-v1", "suites": flat}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
 
 def main() -> None:
@@ -75,6 +91,9 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(derived_all, f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
+        traj = Path(__file__).parent.parent / "BENCH_fleet.json"
+        write_trajectory(derived_all, traj)
+        print(f"wrote {traj}", file=sys.stderr)
     failed = []
     for gate in args.gate or ():
         if gate not in derived_all:

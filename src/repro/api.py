@@ -44,7 +44,7 @@ from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
-    "compiler", "PlacementCompiler",
+    "compiler", "obs", "PlacementCompiler",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
     "list_substrates",
@@ -56,6 +56,16 @@ def compiler() -> PlacementCompiler:
     batched LUT build service. Pass the same instance to several
     ``scheduler``/``engine``/``fleet`` calls to share one build cache."""
     return PlacementCompiler()
+
+
+def obs():
+    """The process-wide observability facade (:mod:`repro.obs`,
+    DESIGN.md SS.8): ``obs().enable()`` turns on tracing, ``obs().
+    tracer()``/``metrics()``/``flight_recorder()`` read back the
+    recorded state, ``obs().export(trace_path, metrics_path)`` writes
+    Perfetto-loadable ``trace.json`` and a ``metrics.json`` snapshot."""
+    from repro import obs as _obs
+    return _obs
 
 
 def substrate(name: Union[str, Substrate], **over) -> Substrate:

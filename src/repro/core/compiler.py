@@ -22,6 +22,7 @@ import os
 from pathlib import Path
 from typing import Dict, Iterable, Optional, Tuple, Union
 
+from repro import obs
 from repro.core.energy import EnergyModel
 from repro.core.placement import LUTEntry, PlacementLUT
 from repro.core.solvers import PlacementSolver, make_solver
@@ -89,12 +90,21 @@ class PlacementCompiler:
             n_points=n_points, rho=em.rho, static_window=static_window,
             slowdown=slowdown_signature(em.time_scale))
         hit = self._cache.get(key)
+        # cache traffic is mirrored into the metrics registry
+        # unconditionally (rare events): the CLI's --compiler-stats shim
+        # and the flight recorder's lut_cache frame field read it there
         if hit is not None:
             self.n_hits += 1
+            obs.metrics().counter("compiler.lut.hit")
             return hit
         self.n_builds += 1
-        built = sol.build_lut(em, t_slice_ns=t_slice_ns, n_points=n_points,
-                              static_window=static_window)
+        obs.metrics().counter("compiler.lut.build")
+        with obs.span("compiler.lut_build", "compiler",
+                      variant=str(key[0]), model=key[1],
+                      solver=sol.name, n_points=n_points):
+            built = sol.build_lut(em, t_slice_ns=t_slice_ns,
+                                  n_points=n_points,
+                                  static_window=static_window)
         self._cache[key] = built
         return built
 
@@ -137,6 +147,10 @@ class PlacementCompiler:
 
     def save(self, path) -> Path:
         """Serialize the LUT cache to ``path`` (atomic tmp+rename)."""
+        with obs.span("compiler.save", "compiler", entries=len(self._cache)):
+            return self._save(path)
+
+    def _save(self, path) -> Path:
         path = Path(path)
         payload = {"version": CACHE_FORMAT_VERSION, "luts": []}
         for key, lut in self._cache.items():
@@ -154,6 +168,12 @@ class PlacementCompiler:
         """Merge a :meth:`save`d cache; existing keys win. Returns the
         number of LUTs added; a missing file is a cold start (0), a
         version mismatch is skipped rather than raised."""
+        with obs.span("compiler.load", "compiler") as sp_:
+            added = self._load(path)
+            sp_.set("added", added)
+            return added
+
+    def _load(self, path) -> int:
         path = Path(path)
         if not path.exists():
             return 0

@@ -16,6 +16,7 @@ import dataclasses
 import warnings
 from typing import Dict, List, Optional
 
+from repro import obs
 from repro.core import spaces as sp
 from repro.core.compiler import slowdown_signature
 from repro.core.energy import EnergyModel, Placement
@@ -158,6 +159,8 @@ class TimeSliceScheduler:
     def lut(self) -> PlacementLUT:
         key = self._slowdown_key()
         if key not in self._lut_cache:
+            if obs.enabled():
+                obs.counter("sched.lut.miss")
             if self.compiler is not None:
                 # fleet-wide build service: engines of the same shape and
                 # slowdown signature share one build
@@ -167,10 +170,15 @@ class TimeSliceScheduler:
                     static_window=self.static_window,
                     variant_key=self.variant_key)
             else:
-                self._lut_cache[key] = self.solver.build_lut(
-                    self.em, t_slice_ns=self.t_slice_ns,
-                    n_points=self.lut_points,
-                    static_window=self.static_window)
+                with obs.span("sched.lut_build", "scheduler",
+                              arch=self.arch.name, solver=self.solver.name,
+                              n_points=self.lut_points):
+                    self._lut_cache[key] = self.solver.build_lut(
+                        self.em, t_slice_ns=self.t_slice_ns,
+                        n_points=self.lut_points,
+                        static_window=self.static_window)
+        elif obs.enabled():
+            obs.counter("sched.lut.hit")
         return self._lut_cache[key]
 
     # -- one slice ----------------------------------------------------------
@@ -188,6 +196,8 @@ class TimeSliceScheduler:
         caller carries the remainder into the next slice. Default keeps the
         paper semantics (whole backlog runs, deadline possibly missed).
         """
+        _obs = obs.enabled()
+        _t0 = obs.now_ns() if _obs else 0
         T = self.t_slice_ns
         n_plan = max(lookup_tasks if lookup_tasks is not None else n_tasks, 1)
         lut = self.lut
@@ -240,6 +250,23 @@ class TimeSliceScheduler:
                           e_dyn, e_static, deadline_met, n_executed=n_run)
         self.placement = new_placement
         self._idx += 1
+        if _obs:
+            # the slice span carries the full SliceReport so a Perfetto
+            # timeline attributes every missed deadline to its placement
+            obs.complete("sched.slice", _t0, cat="scheduler", args={
+                "slice": rep.slice_idx, "n_tasks": n_tasks,
+                "n_executed": n_run, "lookup_tasks": n_plan,
+                "t_constraint_ns": rep.t_constraint_ns,
+                "t_move_ns": t_move, "t_exec_ns": t_exec,
+                "moved_weights": moved, "e_dyn_pj": e_dyn,
+                "e_static_pj": e_static, "e_move_pj": e_move,
+                "deadline_met": deadline_met,
+                "placement": dict(new_placement)})
+            if moved:
+                obs.instant("sched.migration", cat="scheduler",
+                            args={"slice": rep.slice_idx,
+                                  "moved_weights": moved,
+                                  "t_move_ns": t_move})
         return rep
 
     def run(self, tasks_per_slice: List[int]) -> List[SliceReport]:

@@ -16,6 +16,9 @@ from repro.fleet.router import FleetResult
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
+    """NaN on empty input: callers that aggregate decide the fallback
+    (``summarize`` maps the no-completions case to 0.0 + ``degenerate``
+    instead of letting NaN poison downstream JSON/gates)."""
     if not len(xs):
         return float("nan")
     return float(np.percentile(np.asarray(xs, np.float64), q))
@@ -43,6 +46,9 @@ class FleetSummary:
     weights_moved: int
     mean_backlog: float
     peak_backlog: int
+    # no request ever completed: latency stats are 0.0 placeholders, not
+    # NaN (NaN breaks JSON round-trips and silently un-gates CI checks)
+    degenerate: bool = False
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -60,6 +66,24 @@ def summarize(res: FleetResult) -> FleetSummary:
     energy_pj = sum(r.energy_pj for r in all_reports)
     tokens = sum(r.tokens for r in res.completed)
     backlogs = [r.n_tasks for r in all_reports]
+    if not lat_ms:
+        # degenerate trace (zero completions): report zeros explicitly
+        # instead of percentile([]) = NaN / 0-token division
+        return FleetSummary(
+            trace=res.trace, n_slices=res.n_slices,
+            n_engines=len(res.reports), n_submitted=n_sub,
+            n_completed=0, n_rejected=len(res.rejected),
+            n_unfinished=len(res.unfinished),
+            p50_ms=0.0, p95_ms=0.0, p99_ms=0.0, mean_ms=0.0,
+            slo_ms=slo_ms,
+            deadline_miss_rate=misses / n_sub if n_sub else 0.0,
+            energy_uj=energy_pj * 1e-6, energy_per_token_uj=0.0,
+            tokens=0,
+            migrations=sum(r.moved_weights > 0 for r in all_reports),
+            weights_moved=sum(r.moved_weights for r in all_reports),
+            mean_backlog=float(np.mean(backlogs)) if backlogs else 0.0,
+            peak_backlog=max(backlogs) if backlogs else 0,
+            degenerate=True)
     return FleetSummary(
         trace=res.trace,
         n_slices=res.n_slices,

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels.pim_mac.kernel import pim_matmul_pallas
 from repro.kernels.pim_mac.ref import pim_matmul_ref
 
@@ -31,8 +32,6 @@ def _on_tpu() -> bool:
         return False
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
-                                             "backend"))
 def pim_matmul(x_i8: jnp.ndarray, w_i8: jnp.ndarray,
                scale_x: jnp.ndarray, scale_w: jnp.ndarray, *,
                bm: int = 128, bn: int = 128, bk: int = 128,
@@ -41,15 +40,32 @@ def pim_matmul(x_i8: jnp.ndarray, w_i8: jnp.ndarray,
 
     backend: "auto" (pallas on TPU, ref elsewhere), "pallas",
              "pallas_interpret" (kernel body on CPU), or "ref".
+
+    Backend resolution and dispatch accounting stay OUTSIDE the jit so
+    every call is counted (the jitted body only runs at trace time);
+    the resolved backend is a static argname, so the compile cache is
+    unchanged.
     """
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "ref"
+    if obs.enabled():
+        obs.counter("kernels.pim_mac.dispatch", backend=backend)
+    return _pim_matmul_impl(x_i8, w_i8, scale_x, scale_w, bm=bm, bn=bn,
+                            bk=bk, out_dtype=out_dtype, backend=backend)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype",
+                                             "backend"))
+def _pim_matmul_impl(x_i8: jnp.ndarray, w_i8: jnp.ndarray,
+                     scale_x: jnp.ndarray, scale_w: jnp.ndarray, *,
+                     bm: int, bn: int, bk: int, out_dtype,
+                     backend: str) -> jnp.ndarray:
     M, K = x_i8.shape
     _, N = w_i8.shape
     scale_x = jnp.broadcast_to(jnp.asarray(scale_x, jnp.float32).reshape(-1),
                                (M,))
     scale_w = jnp.broadcast_to(jnp.asarray(scale_w, jnp.float32).reshape(-1),
                                (N,))
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "ref"
     if backend == "ref":
         return pim_matmul_ref(x_i8, w_i8, scale_x, scale_w, out_dtype)
 

@@ -4,10 +4,19 @@ Runs a trace-driven multi-engine serving fleet: N HH-PIM serve engines
 (TPU parameterization), per-engine load forecasting driving proactive
 weight migration, SLO-aware routing with optional admission control.
 
-    python -m repro.launch.fleet --trace mmpp --engines 2 --requests 32
+    python -m repro.launch.fleet --workload mmpp --engines 2 --requests 32
     python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...
     python -m repro.launch.fleet --substrate cxl-tier-3 \\
         --compiler-stats --lut-cache ckpt/luts.json ...   # warm-start
+    python -m repro.launch.fleet --trace --flight-recorder ...  # DESIGN SS.8
+
+``--trace [PATH]`` turns on the observability layer (repro.obs) and
+writes a Perfetto-loadable ``trace.json`` plus a ``metrics.json``
+snapshot after the run; ``--flight-recorder [PATH]`` arms the SLO-breach
+flight recorder (ring buffer of per-slice fleet state, dumped as JSON
+when the running deadline-miss rate crosses ``--miss-threshold``).
+``--trace NAME`` with an arrival-trace name still selects the workload
+for one release; ``--workload`` is the canonical spelling.
 
 With ``--decode`` (default) every worker carries a real
 ``HeteroServeEngine``: each slice's placement is applied as an actual
@@ -19,18 +28,41 @@ from __future__ import annotations
 
 import argparse
 import json
+from pathlib import Path
 
-from repro import api
+from repro import api, obs
 from repro.fleet import make_trace, summarize
 from repro.fleet.forecast import FORECASTERS
 from repro.fleet.router import POLICIES
 from repro.fleet.traces import TRACES
 
 
+def _is_workload_name(value: str) -> bool:
+    return value in TRACES or value.startswith("case")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--trace", default="mmpp",
-                    help=f"one of {sorted(TRACES)} or a case* scenario")
+    ap.add_argument("--workload", default=None,
+                    help=f"arrival trace: one of {sorted(TRACES)} or a "
+                         f"case* scenario (default mmpp)")
+    ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
+                    metavar="PATH",
+                    help="enable structured tracing; write Chrome "
+                         "trace-event JSON to PATH (default trace.json, "
+                         "with a metrics.json snapshot alongside). "
+                         "Passing an arrival-trace NAME here still "
+                         "selects the workload (deprecated; use "
+                         "--workload)")
+    ap.add_argument("--flight-recorder", nargs="?", const="flight.json",
+                    default=None, metavar="PATH",
+                    help="arm the SLO-breach flight recorder; dump the "
+                         "last --flight-capacity slice frames to PATH "
+                         "when the running deadline-miss rate crosses "
+                         "--miss-threshold")
+    ap.add_argument("--flight-capacity", type=int, default=32)
+    ap.add_argument("--miss-threshold", type=float, default=0.3,
+                    help="flight-recorder deadline-miss-rate trigger")
     ap.add_argument("--engines", type=int, default=2)
     ap.add_argument("--requests", type=int, default=None,
                     help="total request budget (truncates the trace)")
@@ -61,7 +93,9 @@ def main(argv=None) -> None:
     ap.add_argument("--no-decode", dest="decode", action="store_false")
     ap.add_argument("--compiler-stats", action="store_true",
                     help="report PlacementCompiler builds/hits/entries "
-                         "after the run")
+                         "after the run (deprecated shim: the counters "
+                         "now live in the repro.obs metrics registry - "
+                         "see --trace / metrics.json; kept one release)")
     ap.add_argument("--lut-cache", default=None, metavar="PATH",
                     help="warm-start: load the placement-compiler LUT "
                          "cache from PATH when it exists and save it back "
@@ -72,7 +106,37 @@ def main(argv=None) -> None:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    trace = make_trace(args.trace, n_slices=args.steps, seed=args.seed)
+    # --trace NAME legacy shim: an arrival-trace name selects the
+    # workload (pre-observability CLI syntax), anything else is the
+    # tracing output path
+    workload = args.workload
+    trace_out = None
+    if args.trace is not None:
+        if args.trace != "trace.json" and _is_workload_name(args.trace):
+            if workload is None:
+                print(f"note: '--trace {args.trace}' selects the arrival "
+                      f"trace; use --workload (kept one release)")
+                workload = args.trace
+            else:
+                raise SystemExit(f"--trace {args.trace} conflicts with "
+                                 f"--workload {workload}; --trace PATH "
+                                 f"is the tracing output file")
+        else:
+            trace_out = args.trace
+    workload = workload or "mmpp"
+
+    obs_on = trace_out is not None or args.flight_recorder is not None
+    if obs_on:
+        obs.reset()
+        rec = None
+        if args.flight_recorder is not None:
+            rec = obs.FlightRecorder(
+                capacity=args.flight_capacity,
+                miss_rate_threshold=args.miss_threshold,
+                path=args.flight_recorder)
+        obs.enable(flight_recorder=rec)
+
+    trace = make_trace(workload, n_slices=args.steps, seed=args.seed)
     if args.requests is not None:
         trace = trace.truncated(args.requests)
 
@@ -156,9 +220,28 @@ def main(argv=None) -> None:
             pc.save(args.lut_cache)
             print(f"lut-cache: saved {len(pc)} LUTs to {args.lut_cache}")
         if args.compiler_stats:
-            cs = pc.stats()
-            print(f"compiler  {cs['builds']} builds, {cs['hits']} hits, "
-                  f"{cs['entries']} cached LUTs")
+            # deprecated shim: same fields, now sourced from the metrics
+            # registry the compiler mirrors its cache traffic into
+            reg = obs.metrics()
+            print(f"compiler  {reg.value('compiler.lut.build')} builds, "
+                  f"{reg.value('compiler.lut.hit')} hits, "
+                  f"{len(pc)} cached LUTs")
+    if obs_on:
+        rec = obs.flight_recorder()
+        if rec is not None:
+            if rec.n_dumps:
+                print(f"flight-recorder: {rec.n_dumps} SLO-breach dump(s) "
+                      f"-> {args.flight_recorder} "
+                      f"({rec.last_dump['reason']})")
+            else:
+                print(f"flight-recorder: no SLO breach "
+                      f"({len(rec)} frames buffered)")
+        if trace_out is not None:
+            paths = obs.export(
+                trace_path=trace_out,
+                metrics_path=Path(trace_out).with_name("metrics.json"))
+            print(f"wrote {paths['trace']} ({len(obs.tracer())} events; "
+                  f"load at ui.perfetto.dev) and {paths['metrics']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(s.as_dict(), f, indent=2)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import lm
 from repro.models.common import ModelConfig
 
@@ -154,8 +155,10 @@ class DecodeEngine:
             mat = np.zeros((n, L), np.int32)
             for j, (_, r) in enumerate(group):
                 mat[j] = r.prompt
-            new_state = self._prefill_fn(n, L)(jnp.asarray(mat))
-            self._scatter_state([i for i, _ in group], new_state)
+            with obs.span("engine.prefill", "engine", n_requests=len(group),
+                          bucket=n, prompt_len=L):
+                new_state = self._prefill_fn(n, L)(jnp.asarray(mat))
+                self._scatter_state([i for i, _ in group], new_state)
             for i, r in group:
                 toks[i] = r.prompt[-1]
                 # prompt prefix state covers positions 0..L-2; the last
@@ -169,8 +172,15 @@ class DecodeEngine:
         self._fill_slots()
         if all(s is None or s.done for s in self.slots):
             return {}
+        _obs = obs.enabled()
+        _t0 = obs.now_ns() if _obs else 0
         logits, self._state = self._step_fn(self._state, self._toks,
                                             jnp.asarray(self._slot_pos))
+        if _obs:
+            obs.complete("engine.decode_step", _t0, cat="engine", args={
+                "active": sum(s is not None and not s.done
+                              for s in self.slots),
+                "max_batch": self.max_batch})
         self._slot_pos += 1
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         out = {}

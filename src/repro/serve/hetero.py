@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import spaces as sp
 from repro.core.scheduler import SliceReport, TimeSliceScheduler
 from repro.models import lm
@@ -177,6 +178,8 @@ class HeteroServeEngine:
     def _retier(self, placement: Dict[str, int]) -> bool:
         if placement == self._tiered_placement:
             return False
+        _obs = obs.enabled()
+        _t0 = obs.now_ns() if _obs else 0
         K = self.model_spec.n_params
         space_to_tier = {s: t for s, t, _ in self._tier_plan}
         formats = {t: f for _, t, f in self._tier_plan}
@@ -200,6 +203,12 @@ class HeteroServeEngine:
                     {t: counts.get(t, 0) for t in order}, formats=formats)
         self._tiered = tiers
         self._tiered_placement = dict(placement)
+        if _obs:
+            # a migration = weights actually re-quantized and re-split
+            obs.complete("engine.migration", _t0, cat="engine",
+                         args={"placement": dict(placement),
+                               "n_weights": len(tiers)})
+            obs.counter("engine.migrations")
         return True
 
     def apply_placement(self, placement: Dict[str, int]) -> bool:
@@ -217,9 +226,14 @@ class HeteroServeEngine:
 
     def _decode_tokens(self, n_requests: int) -> np.ndarray:
         """Decode one token per active request through the tiered model."""
+        _obs = obs.enabled()
+        _t0 = obs.now_ns() if _obs else 0
         logits, self._state = lm.decode_step(
             self.params, self.cfg, self._state, self._toks,
             jnp.int32(self._pos))
+        if _obs:
+            obs.complete("engine.decode", _t0, cat="engine",
+                         args={"n_requests": n_requests})
         # tiered verification path: run the first tiered FFN on the final
         # hidden state proxy to exercise placement-dependent compute
         self._pos += 1

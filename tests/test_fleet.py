@@ -272,3 +272,27 @@ def test_fleet_with_decode_exercises_tiered_weights():
 def test_fleet_request_defaults():
     r = FleetRequest(rid=1, arrival_slice=0)
     assert not r.rejected and r.worker is None and r.latency_ns is None
+    assert r.slo_class == "default" and r.admission is None
+
+
+def test_degenerate_summary_zero_completions_has_no_nans():
+    """Zero completed requests must yield 0.0 stats + degenerate=True,
+    never NaN (NaN breaks JSON round-trips and un-gates CI checks)."""
+    import json
+    import math
+
+    fleet = build_fleet(n_engines=1, forecaster="none", admission_limit=0)
+    s = summarize(fleet.run(replay_trace([3, 2])))
+    assert s.degenerate and s.n_completed == 0
+    assert s.n_rejected == 5 and s.deadline_miss_rate == 1.0
+    assert (s.p50_ms, s.p95_ms, s.p99_ms, s.mean_ms) == (0.0,) * 4
+    assert s.tokens == 0 and s.energy_per_token_uj == 0.0
+    d = json.loads(json.dumps(s.as_dict()))
+    assert not any(isinstance(v, float) and math.isnan(v)
+                   for v in d.values())
+
+
+def test_normal_summary_is_not_degenerate():
+    fleet = build_fleet(n_engines=2, forecaster="none")
+    s = summarize(fleet.run(replay_trace([2] * 10)))
+    assert not s.degenerate and s.n_completed > 0
