@@ -1,16 +1,28 @@
-"""Fleet benchmark: trace x fleet-size x forecaster sweep.
+"""Fleet benchmark: forecaster sweep + hierarchical-fleet scaling suite.
 
-Runs the analytic fleet (scheduler + energy model, no token decode) over
-bursty and steady arrival traces, several fleet sizes and every
-forecaster, averaging each cell over seeds. Emits one row per cell plus
-headline comparisons (same shape as ``benchmarks/paper_tables.py``:
-(rows, derived)), and writes everything to
-``benchmarks/results/fleet_bench.json``.
+Two suites over the analytic fleet (scheduler + energy model, no token
+decode), selected with ``--suite {forecast,hierarchy,all}``:
 
-The claim under test is the fleet-scale version of the paper's Fig. 4/5
-story: consulting the placement LUT on a *forecast* of next-slice load
-(proactive migration) beats the paper's reactive lookup on bursty
-traffic - lower deadline-miss-rate at a modest energy-per-token premium.
+* ``forecast`` - trace x fleet-size x forecaster sweep. The claim under
+  test is the fleet-scale version of the paper's Fig. 4/5 story:
+  consulting the placement LUT on a *forecast* of next-slice load
+  (proactive migration) beats the paper's reactive lookup on bursty
+  traffic.
+* ``hierarchy`` - hundreds of engines (512 full / 192 ``--quick``) on an
+  overloaded mmpp trace: the flat PR 1 router vs the two-level cell
+  router at equal engine count (claim: >= 20 deadline-miss points cut),
+  plus an autoscaling scenario whose scale-ups must pay **0** LUT builds
+  (warm-start through the shared placement compiler) and a save/load
+  warm rerun that rebuilds nothing.
+
+Emits one row per cell plus headline comparisons (same shape as
+``benchmarks/paper_tables.py``: (rows, derived)) and writes everything
+to ``benchmarks/results/fleet_bench.json``. ``--update-trajectory``
+merges the scalar derived values into the committed top-level
+``BENCH_fleet.json`` (read-modify-write: suites this invocation did not
+run are preserved); ``--gate`` compares the fresh numbers against that
+committed point and fails on regression (the CI ``hierarchy-smoke``
+job's check).
 
 Run: ``PYTHONPATH=src python -m benchmarks.fleet_bench`` (or
 ``python benchmarks/fleet_bench.py``). ``--trace [PATH]`` records the
@@ -38,6 +50,16 @@ FORECASTERS = ("none", "ewma", "ar1", "holt")
 MARGIN = 1.3                  # over-provisioning factor for forecasters
 TOKENS_PER_TASK = 2
 N_SLICES = 40
+
+# hierarchy suite shape: full scale vs the CI ``--quick`` scale
+HIER_FULL = dict(n_engines=512, n_cells=32, n_slices=48)
+HIER_QUICK = dict(n_engines=192, n_cells=16, n_slices=40)
+#: committed perf-trajectory point (schema bench-trajectory-v1)
+TRAJECTORY = Path(__file__).parent.parent / "BENCH_fleet.json"
+#: --gate tolerances vs the committed point (relative); miss rates are
+#: compared in absolute points
+GATE_REL = {"hier_p99_us": 0.5, "hier_energy_per_token_uj": 0.2}
+GATE_MISS_SLACK = 5.0         # absolute points of miss_cut regression
 
 # per-engine rates; scaled by fleet size so offered load per engine is
 # constant across fleet sizes
@@ -122,8 +144,180 @@ def fleet_sweep() -> Tuple[List[Dict], Dict]:
     return rows, derived
 
 
+def _mmpp(n_engines: int, n_slices: int, seed: int = 0):
+    kw = dict(TRACE_GRID["mmpp"])
+    for k in _SCALED["mmpp"]:
+        kw[k] = kw[k] * n_engines
+    return make_trace("mmpp", n_slices=n_slices, seed=seed, **kw)
+
+
+def _hier_row(tag: str, s, wall_s: float, **extra) -> Dict:
+    return {
+        "scenario": tag,
+        "miss_rate": round(s.deadline_miss_rate, 4),
+        "p99_us": round(s.p99_ms * 1e3, 3),
+        "energy_per_token_uj": round(s.energy_per_token_uj, 3),
+        "n_completed": s.n_completed,
+        "n_rejected": s.n_rejected,
+        "wall_s": round(wall_s, 2),
+        **extra,
+    }
+
+
+def hierarchy_sweep(*, n_engines: int, n_cells: int, n_slices: int
+                    ) -> Tuple[List[Dict], Dict]:
+    """Flat vs two-level router at equal engine count, autoscaling with
+    warm-started scale-ups, and a save/load warm rerun."""
+    per_cell = n_engines // n_cells
+    tr = _mmpp(n_engines, n_slices)
+    rows: List[Dict] = []
+
+    t0 = time.perf_counter()
+    flat = api.fleet("tpu-pool", n_engines=n_engines, forecaster="ewma",
+                     policy="slo", tokens_per_task=TOKENS_PER_TASK,
+                     forecast_margin=MARGIN)
+    s_flat = summarize(flat.run(tr))
+    flat_s = time.perf_counter() - t0
+    rows.append(_hier_row("flat_slo_router", s_flat, flat_s,
+                          engines=n_engines))
+
+    t0 = time.perf_counter()
+    hier = api.hierarchical_fleet(
+        "tpu-pool", n_cells=n_cells, engines_per_cell=per_cell,
+        forecaster="ewma", forecast_margin=MARGIN,
+        tokens_per_task=TOKENS_PER_TASK)
+    res = hier.run(tr)
+    s_hier = summarize(res)
+    hier_s = time.perf_counter() - t0
+    rows.append(_hier_row("hierarchical", s_hier, hier_s,
+                          engines=n_engines, cells=n_cells))
+
+    # autoscale: start at a quarter of the engines, ceiling = per_cell;
+    # every scale-up must come from the warm compiler cache (0 builds)
+    pc = api.compiler()
+    start_per_cell = max(per_cell // 4, 1)
+    t0 = time.perf_counter()
+    auto = api.hierarchical_fleet(
+        "tpu-pool", n_cells=n_cells, engines_per_cell=start_per_cell,
+        forecaster="ewma", forecast_margin=MARGIN,
+        tokens_per_task=TOKENS_PER_TASK, autoscale=True,
+        max_engines=per_cell, compiler=pc)
+    res_auto = auto.run(tr)
+    s_auto = summarize(res_auto)
+    auto_s = time.perf_counter() - t0
+    rows.append(_hier_row(
+        "hierarchical_autoscale", s_auto, auto_s,
+        engines=res_auto.n_engines_peak, cells=n_cells,
+        scale_ups=res_auto.n_scale_ups,
+        scale_downs=res_auto.n_scale_downs,
+        scale_up_builds=res_auto.scale_up_builds))
+
+    # warm rerun: a restarted fleet loads the LUT cache and rebuilds
+    # nothing, scale-ups included
+    cache = Path(__file__).parent / "results" / "fleet_bench_luts.json"
+    pc.save(cache)
+    pc2 = api.compiler()
+    pc2.load(cache)
+    t0 = time.perf_counter()
+    warm = api.hierarchical_fleet(
+        "tpu-pool", n_cells=n_cells, engines_per_cell=start_per_cell,
+        forecaster="ewma", forecast_margin=MARGIN,
+        tokens_per_task=TOKENS_PER_TASK, autoscale=True,
+        max_engines=per_cell, compiler=pc2)
+    res_warm = warm.run(tr)
+    s_warm = summarize(res_warm)
+    warm_s = time.perf_counter() - t0
+    rows.append(_hier_row(
+        "hierarchical_autoscale_warm", s_warm, warm_s,
+        engines=res_warm.n_engines_peak, cells=n_cells,
+        scale_ups=res_warm.n_scale_ups,
+        scale_up_builds=res_warm.scale_up_builds,
+        compiler_builds=pc2.n_builds, compiler_loaded=pc2.n_loaded))
+
+    cut = (s_flat.deadline_miss_rate - s_hier.deadline_miss_rate) * 100
+    derived = {
+        "n_engines": n_engines,
+        "n_cells": n_cells,
+        "flat_miss": round(s_flat.deadline_miss_rate, 4),
+        "hier_miss": round(s_hier.deadline_miss_rate, 4),
+        "miss_cut_points": round(cut, 1),
+        "miss_cut_ok": cut >= 20.0,
+        "flat_p99_us": round(s_flat.p99_ms * 1e3, 3),
+        "hier_p99_us": round(s_hier.p99_ms * 1e3, 3),
+        "hier_energy_per_token_uj": round(s_hier.energy_per_token_uj, 3),
+        "router_speedup": round(flat_s / hier_s, 1) if hier_s > 0 else 0.0,
+        "autoscale_scale_ups": res_auto.n_scale_ups,
+        "autoscale_peak_engines": res_auto.n_engines_peak,
+        "scale_up_builds": res_auto.scale_up_builds,
+        "scale_up_builds_ok": (res_auto.n_scale_ups > 0
+                               and res_auto.scale_up_builds == 0),
+        "warm_compiler_builds": pc2.n_builds,
+        "warm_scale_up_builds": res_warm.scale_up_builds,
+        "warm_ok": pc2.n_builds == 0 and res_warm.scale_up_builds == 0,
+    }
+    return rows, derived
+
+
+def merge_trajectory(suite: str, derived: Dict,
+                     path: Path = TRAJECTORY) -> None:
+    """Read-modify-write the committed trajectory point: update ONE
+    suite's scalars, preserve every other suite (benchmarks/run.py owns
+    the paper-table suites; this file owns fleet_hierarchy*)."""
+    payload = {"schema": "bench-trajectory-v1", "suites": {}}
+    if path.exists():
+        payload = json.loads(path.read_text())
+    payload["suites"][suite] = {
+        k: v for k, v in derived.items()
+        if isinstance(v, (int, float, bool, str))}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def gate_against_trajectory(suite: str, derived: Dict,
+                            path: Path = TRAJECTORY) -> List[str]:
+    """Compare a fresh hierarchy run against the committed point.
+    Returns failure messages (empty = pass): the boolean claims must
+    hold, p99/energy must stay within GATE_REL of the committed values,
+    and the miss-rate cut must not regress by > GATE_MISS_SLACK points."""
+    failures = []
+    for flag in ("miss_cut_ok", "scale_up_builds_ok", "warm_ok"):
+        if not derived.get(flag):
+            failures.append(f"{flag} is false")
+    committed = json.loads(path.read_text())["suites"].get(suite)
+    if committed is None:
+        return failures + [f"no committed suite {suite!r} in {path}"]
+    for key, rel in GATE_REL.items():
+        ref, got = committed.get(key), derived.get(key)
+        if ref and got and abs(got - ref) > rel * ref:
+            failures.append(f"{key}: {got} vs committed {ref} "
+                            f"(tolerance {rel:.0%})")
+    ref_cut = committed.get("miss_cut_points")
+    if ref_cut is not None and (derived["miss_cut_points"]
+                                < ref_cut - GATE_MISS_SLACK):
+        failures.append(f"miss_cut_points regressed: "
+                        f"{derived['miss_cut_points']} vs committed "
+                        f"{ref_cut} (slack {GATE_MISS_SLACK} points)")
+    return failures
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suite", default="forecast",
+                    choices=("forecast", "hierarchy", "all"))
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized hierarchy suite "
+                         f"({HIER_QUICK['n_engines']} engines instead of "
+                         f"{HIER_FULL['n_engines']})")
+    ap.add_argument("--engines", type=int, default=None,
+                    help="override the hierarchy suite's engine count")
+    ap.add_argument("--cells", type=int, default=None,
+                    help="override the hierarchy suite's cell count")
+    ap.add_argument("--update-trajectory", action="store_true",
+                    help="merge the hierarchy derived scalars into the "
+                         f"committed {TRAJECTORY.name}")
+    ap.add_argument("--gate", action="store_true",
+                    help="fail (exit 1) when the hierarchy suite's "
+                         "claims break or its numbers drift from the "
+                         f"committed {TRAJECTORY.name}")
     ap.add_argument("--trace", nargs="?", const="fleet_bench_trace.json",
                     default=None, metavar="PATH",
                     help="record the sweep through repro.obs and write "
@@ -148,17 +342,50 @@ def main(argv=None) -> None:
 
     out_dir = Path(__file__).parent / "results"
     out_dir.mkdir(exist_ok=True)
-    t0 = time.perf_counter()
-    rows, derived = fleet_sweep()
-    us = (time.perf_counter() - t0) * 1e6
-    with open(out_dir / "fleet_bench.json", "w") as f:
-        json.dump({"rows": rows, "derived": derived}, f, indent=2)
+    payload = {}
     print("name,us_per_call,derived")
-    print(f"fleet_sweep,{us:.0f},{json.dumps(derived)}")
-    for r in rows:
-        print(f"  {r['trace']:8s} x{r['engines']} {r['forecaster']:5s} "
-              f"miss={r['miss_rate']:.3f} p95={r['p95_us']:.2f}us "
-              f"e/tok={r['energy_per_token_uj']:.2f}uJ")
+
+    if args.suite in ("forecast", "all"):
+        t0 = time.perf_counter()
+        rows, derived = fleet_sweep()
+        us = (time.perf_counter() - t0) * 1e6
+        payload["forecast"] = {"rows": rows, "derived": derived}
+        print(f"fleet_sweep,{us:.0f},{json.dumps(derived)}")
+        for r in rows:
+            print(f"  {r['trace']:8s} x{r['engines']} {r['forecaster']:5s} "
+                  f"miss={r['miss_rate']:.3f} p95={r['p95_us']:.2f}us "
+                  f"e/tok={r['energy_per_token_uj']:.2f}uJ")
+
+    gate_failures = []
+    if args.suite in ("hierarchy", "all"):
+        shape = dict(HIER_QUICK if args.quick else HIER_FULL)
+        if args.engines is not None:
+            shape["n_engines"] = args.engines
+        if args.cells is not None:
+            shape["n_cells"] = args.cells
+        suite_name = ("fleet_hierarchy_quick" if args.quick
+                      else "fleet_hierarchy")
+        t0 = time.perf_counter()
+        rows, derived = hierarchy_sweep(**shape)
+        us = (time.perf_counter() - t0) * 1e6
+        payload["hierarchy"] = {"rows": rows, "derived": derived}
+        print(f"hierarchy_sweep,{us:.0f},{json.dumps(derived)}")
+        for r in rows:
+            extra = "".join(
+                f" {k}={r[k]}" for k in ("scale_ups", "scale_up_builds")
+                if k in r)
+            print(f"  {r['scenario']:28s} x{r['engines']} "
+                  f"miss={r['miss_rate']:.3f} p99={r['p99_us']:.2f}us "
+                  f"e/tok={r['energy_per_token_uj']:.2f}uJ "
+                  f"wall={r['wall_s']}s{extra}")
+        if args.update_trajectory:
+            merge_trajectory(suite_name, derived)
+            print(f"merged suite {suite_name} into {TRAJECTORY}")
+        if args.gate:
+            gate_failures = gate_against_trajectory(suite_name, derived)
+
+    with open(out_dir / "fleet_bench.json", "w") as f:
+        json.dump(payload, f, indent=2)
     if args.trace is not None:
         paths = obs.export(
             trace_path=args.trace,
@@ -169,6 +396,10 @@ def main(argv=None) -> None:
     if rec is not None:
         print(f"flight-recorder: {rec.n_dumps} dump(s), "
               f"{len(rec)} frames buffered")
+    if gate_failures:
+        for msg in gate_failures:
+            print(f"GATE FAILED {msg}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -276,6 +276,14 @@ def pool_substrates() -> Tuple[List[Dict], Dict]:
             [r["gpu_over_tpu"] for r in rows])), 3),
         "misses_match_tpu": all(r["gpu_misses"] == r["tpu_misses"]
                                 for r in rows),
+        # false is EXPECTED, not a bug: the pools are different machines
+        # (own t_slice sizing, static-energy window, DVFS-scaled LP
+        # clock), so per-scenario deadline outcomes need not coincide -
+        # only each pool's own dp/closed-form cross-check is gated
+        "misses_match_tpu_reason": (
+            "informational; gpu-pool and tpu-pool each run their own "
+            "t_slice/static-window/DVFS operating point, so deadline "
+            "outcomes can legitimately diverge per scenario"),
         "gpu_dp_max_dev_pct": round(float(np.max(devs)), 3),
         "gpu_dp_misses_agree": misses_agree,
         "gpu_solver_agreement_ok": bool(

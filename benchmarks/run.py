@@ -43,15 +43,20 @@ GATES = {
 def write_trajectory(derived_all: dict, path: Path) -> None:
     """The stable perf-trajectory point: suite -> scalar metrics only
     (committed as a top-level BENCH_fleet.json so future PRs diff their
-    numbers against this baseline). Non-scalar derived values (lists,
-    per-cell dicts) are dropped - the schema must stay diffable."""
-    flat = {}
+    numbers against this baseline). Merge semantics: only the suites
+    this invocation ran are replaced - suites owned by other runners
+    (benchmarks/fleet_bench.py's fleet_hierarchy*) and suites skipped by
+    ``--only``/``--quick`` are preserved. Non-scalar derived values
+    (lists, per-cell dicts) are dropped - the schema must stay
+    diffable."""
+    payload = {"schema": "bench-trajectory-v1", "suites": {}}
+    if path.exists():
+        payload = json.loads(path.read_text())
     for suite, derived in derived_all.items():
         scalars = {k: v for k, v in derived.items()
-                   if isinstance(v, (int, float, bool))}
+                   if isinstance(v, (int, float, bool, str))}
         if scalars:
-            flat[suite] = scalars
-    payload = {"schema": "bench-trajectory-v1", "suites": flat}
+            payload["suites"][suite] = scalars
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
 

@@ -1,13 +1,14 @@
 """Fleet serving demo: reactive vs forecasting placement on bursty traffic.
 
 Everything is constructed through the ``repro.api`` facade: a substrate
-registry name ("tpu-pool" / "tpu-pool-mixed") plus keyword overrides
-replaces the old hand-wired ``build_fleet`` plumbing. The demo builds a
-two-engine fleet (analytic path - no model weights needed), runs the same
-diurnal trace with the paper's reactive LUT lookup and with a trend-aware
-forecaster feeding the scheduler's ``lookup_tasks`` hook, then shows a
-heterogeneous (mixed big/small) fleet where SLO-aware routing beats
-round-robin.
+registry name ("tpu-pool" / "tpu-pool-mixed") plus keyword overrides.
+The demo builds a two-engine fleet (analytic path - no model weights
+needed), runs the same diurnal trace with the paper's reactive LUT
+lookup and with a trend-aware forecaster feeding the scheduler's
+``lookup_tasks`` hook, shows a heterogeneous (mixed big/small) fleet
+where SLO-aware routing beats round-robin, and finishes with the
+two-level hierarchical fleet (``api.hierarchical_fleet``) autoscaling
+through a burst at zero LUT-build cost.
 
 Run: PYTHONPATH=src python examples/fleet_demo.py
 """
@@ -43,6 +44,18 @@ def main():
     fleet = api.fleet("tpu-pool", n_engines=2, forecaster="holt",
                       forecast_margin=1.3, admission_limit=12)
     show("admission_limit=12", summarize(fleet.run(trace)))
+
+    print("hierarchical fleet (4 cells, autoscaling, warm scale-ups):")
+    pc = api.compiler()
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=4,
+                                  engines_per_cell=1, autoscale=True,
+                                  max_engines=4, compiler=pc)
+    res = hier.run(trace)
+    show("cells=4 autoscale", summarize(res))
+    print(f"  engines {res.n_engines_start} -> peak {res.n_engines_peak} "
+          f"-> end {res.n_engines_end}; {res.n_scale_ups} scale-ups paid "
+          f"{res.scale_up_builds} LUT builds "
+          f"(compiler: {pc.n_builds} builds, {pc.n_hits} hits)")
 
 
 if __name__ == "__main__":

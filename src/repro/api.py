@@ -14,6 +14,8 @@ and solvers are string-keyed registries (DESIGN.md SS.5):
     lut   = api.lut("edge-hhpim", model, t_slice_ns=T)
     eng   = api.engine("tpu-pool", cfg, params, max_batch=4)
     fl    = api.fleet("tpu-pool-mixed", n_engines=4, forecaster="holt")
+    hf    = api.hierarchical_fleet(n_cells=32, engines_per_cell=16,
+                                   autoscale=True)   # DESIGN.md SS.9
 
     pc = api.compiler()                  # batched LUT build service
     fl = api.fleet("gpu-pool-mixed", n_engines=8, compiler=pc)
@@ -24,10 +26,10 @@ strategy = one ``register_solver`` entry. The
 :class:`~repro.core.compiler.PlacementCompiler` (DESIGN.md SS.6) is the
 batched LUT build service: fleets compile all distinct (substrate
 variant, model shape, slowdown) keys in one pass and schedulers route
-straggler-rescaling rebuilds through its shared cache. Legacy
-constructors (``TimeSliceScheduler(arch, model, ...)``,
-``make_baseline_scheduler``, ``build_fleet``) remain as one-release
-deprecation shims over this module.
+straggler-rescaling rebuilds through its shared cache. This module IS
+the construction API: the PR 2 legacy constructors
+(``TimeSliceScheduler(arch, model, ...)``, ``make_baseline_scheduler``,
+``build_fleet``) completed their one-release deprecation and are gone.
 """
 from __future__ import annotations
 
@@ -44,7 +46,7 @@ from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
-    "compiler", "obs", "PlacementCompiler",
+    "hierarchical_fleet", "compiler", "obs", "PlacementCompiler",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
     "list_substrates",
@@ -221,3 +223,126 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
             hetero=hetero, substrate=v, forecast_margin=forecast_margin))
     return Fleet(workers, policy=policy, admission_limit=admission_limit,
                  slo_slices=slo_slices, tokens_per_request=tokens_per_task)
+
+
+def hierarchical_fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None,
+                       *, n_cells: int = 4, engines_per_cell: int = 4,
+                       forecaster: str = "ewma",
+                       budgets: Optional[dict] = None,
+                       class_mix: Optional[dict] = None,
+                       cell_policy: str = "least_loaded",
+                       energy_weight: float = 0.05,
+                       admit_headroom: float = 1.0,
+                       autoscale: bool = False,
+                       min_engines: Optional[int] = None,
+                       max_engines: Optional[int] = None,
+                       autoscale_kw: Optional[dict] = None,
+                       tokens_per_task: Optional[int] = None,
+                       rho: Optional[float] = None,
+                       t_slice_ms: Optional[float] = None,
+                       lut_points: Optional[int] = None,
+                       slo_slices: float = 2.0,
+                       forecast_margin: float = 1.0,
+                       forecaster_kw: Optional[dict] = None,
+                       workload=None,
+                       compiler: Optional[PlacementCompiler] = None,
+                       seed: int = 0, **over):
+    """Construct a two-level (cell -> engine) fleet (DESIGN.md SS.9).
+
+    ``n_cells`` cells of ``engines_per_cell`` engines each; one
+    substrate variant per cell (``sub`` may also be a list of substrate
+    names/instances, cycled across cells - with a mixed substrate,
+    odd-indexed CELLS get the half shape). All engines of a cell share
+    one placement LUT; the fleet-wide
+    :class:`~repro.core.compiler.PlacementCompiler` batch-builds every
+    distinct shape at bring-up, so ``n_cells x engines_per_cell``
+    engines cost at most ``n_cells`` builds (typically 1-2) and a
+    warm-started compiler (``pc.load(...)``) costs zero.
+
+    ``budgets`` maps SLO class -> latency budget in slices (default
+    ``{"default": slo_slices}``); ``class_mix`` maps class ->
+    probability for seeded class assignment. ``autoscale=True`` attaches
+    a :class:`~repro.fleet.hierarchy.CellAutoscaler` with per-cell
+    bounds [``min_engines`` (default 1), ``max_engines`` (default
+    ``engines_per_cell``)]; extra :class:`~repro.fleet.hierarchy.
+    AutoscaleConfig` knobs go in ``autoscale_kw``. Scale-ups build new
+    workers through the shared compiler, so they pay 0 LUT builds.
+
+    The hierarchical path is analytic-only (scheduler + energy model);
+    use :func:`fleet` with ``decode=True`` for functional token decode.
+    """
+    import itertools as _it
+
+    from repro.fleet.forecast import make_forecaster
+    from repro.fleet.hierarchy import (AutoscaleConfig, Cell,
+                                       CellAutoscaler, HierarchicalFleet)
+    from repro.fleet.router import EngineWorker
+
+    names = list(sub) if isinstance(sub, (list, tuple)) else [sub]
+    subs = []
+    for nm in names:
+        s = substrate(nm, **over)
+        if tokens_per_task is None:
+            tokens_per_task = (s.tokens_per_task
+                               if not isinstance(nm, str)
+                               and hasattr(s, "tokens_per_task") else 2)
+        if (hasattr(s, "tokens_per_task")
+                and s.tokens_per_task != tokens_per_task):
+            s = s.replace(tokens_per_task=tokens_per_task)
+        if rho is not None and rho != s.rho:
+            s = s.replace(rho=rho)
+        subs.append(s)
+
+    # one substrate variant per CELL (cells are the unit of shape)
+    cell_subs = [subs[i % len(subs)].engine_variant(i)
+                 for i in range(n_cells)]
+    shapes = {}
+    for v in cell_subs:
+        shapes.setdefault(v.variant_key(), v)
+    models = {vk: v.model_spec(workload if workload is not None else cfg)
+              for vk, v in shapes.items()}
+    if t_slice_ms is None:
+        t_slice_ms = min(
+            v.default_t_slice_ns(models[vk])
+            for vk, v in shapes.items()) / 1e6
+    t_slice_ns = t_slice_ms * 1e6
+
+    pc = compiler if compiler is not None else PlacementCompiler()
+    luts = pc.compile(shapes.values(),
+                      workload if workload is not None else cfg,
+                      t_slice_ns=t_slice_ns, n_points=lut_points)
+
+    wid = _it.count()
+
+    def make_worker(v, lut=None):
+        # lut=None routes the first LUT access through the shared
+        # compiler (a warm cache hit for autoscaler scale-ups)
+        sched = TimeSliceScheduler.from_substrate(
+            v, models[v.variant_key()], t_slice_ns=t_slice_ns, lut=lut,
+            lut_points=lut_points, compiler=pc)
+        return EngineWorker(
+            next(wid), sched,
+            make_forecaster(forecaster, **(forecaster_kw or {})),
+            substrate=v, forecast_margin=forecast_margin)
+
+    cells = [Cell(cid, [make_worker(v, lut=luts[v.variant_key()])
+                        for _ in range(engines_per_cell)],
+                  substrate=v, tokens_per_task=tokens_per_task)
+             for cid, v in enumerate(cell_subs)]
+
+    scaler = None
+    if autoscale:
+        acfg = AutoscaleConfig(
+            min_engines=1 if min_engines is None else min_engines,
+            max_engines=(engines_per_cell if max_engines is None
+                         else max_engines),
+            **(autoscale_kw or {}))
+        scaler = CellAutoscaler(
+            acfg, lambda cell: make_worker(cell.substrate), compiler=pc)
+
+    return HierarchicalFleet(
+        cells, budgets=budgets, class_mix=class_mix,
+        slo_slices=slo_slices, tokens_per_request=tokens_per_task,
+        autoscaler=scaler, cell_policy=cell_policy,
+        energy_weight=energy_weight, admit_headroom=admit_headroom,
+        seed=seed)

@@ -3,16 +3,13 @@
 The policies are registered as degenerate solvers (``fixed-baseline`` /
 ``fixed-hetero`` / ``fixed-hybrid``) bound to the ``edge-*`` substrates;
 construct their runtimes via ``repro.api.scheduler("edge-<kind>", ...)``.
-``make_baseline_scheduler`` remains as a one-release deprecation shim.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Tuple
 
 from repro.core import spaces as sp
 from repro.core.energy import EnergyModel, Placement
-from repro.core.scheduler import FixedPlacementScheduler
 
 
 def baseline_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
@@ -36,16 +33,3 @@ def hybrid_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
     return arch, {"hp_mram": model.n_params}
 
 
-def make_baseline_scheduler(kind: str, model: sp.ModelSpec, *,
-                            t_slice_ns: float, rho: float = 1.0
-                            ) -> FixedPlacementScheduler:
-    """Deprecated shim: use ``repro.api.scheduler("edge-<kind>", ...)``."""
-    if kind not in ("baseline", "hetero", "hybrid"):
-        raise ValueError(kind)
-    warnings.warn(
-        f"make_baseline_scheduler is deprecated; use "
-        f"repro.api.scheduler('edge-{kind}', model, ...) instead "
-        f"(DESIGN.md SS.5)", DeprecationWarning, stacklevel=2)
-    from repro import api
-    return api.scheduler(f"edge-{kind}", model, t_slice_ns=t_slice_ns,
-                         rho=rho)

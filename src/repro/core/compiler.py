@@ -64,6 +64,7 @@ class PlacementCompiler:
         self._cache: Dict[CacheKey, PlacementLUT] = {}
         self.n_builds = 0          # cache misses -> actual solver runs
         self.n_hits = 0            # served from cache
+        self.n_loaded = 0          # entries merged in by load() warm starts
 
     # -- keys ---------------------------------------------------------------
     @staticmethod
@@ -91,7 +92,7 @@ class PlacementCompiler:
             slowdown=slowdown_signature(em.time_scale))
         hit = self._cache.get(key)
         # cache traffic is mirrored into the metrics registry
-        # unconditionally (rare events): the CLI's --compiler-stats shim
+        # unconditionally (rare events): the fleet CLI's lut-cache line
         # and the flight recorder's lut_cache frame field read it there
         if hit is not None:
             self.n_hits += 1
@@ -189,6 +190,11 @@ class PlacementCompiler:
             self._cache[key] = PlacementLUT(rec["arch"], rec["model"],
                                             entries)
             added += 1
+        self.n_loaded += added
+        # mirrored like build/hit traffic: warm-started entries are what
+        # let autoscaler scale-ups report 0 builds (DESIGN.md SS.9)
+        if added:
+            obs.metrics().counter("compiler.lut.loaded", added)
         return added
 
     # -- introspection ------------------------------------------------------
@@ -197,4 +203,4 @@ class PlacementCompiler:
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._cache), "builds": self.n_builds,
-                "hits": self.n_hits}
+                "hits": self.n_hits, "loaded": self.n_loaded}

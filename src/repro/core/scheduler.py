@@ -13,7 +13,6 @@ receives a smaller shard next slice.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Dict, List, Optional
 
 from repro import obs
@@ -22,12 +21,6 @@ from repro.core.compiler import slowdown_signature
 from repro.core.energy import EnergyModel, Placement
 from repro.core.placement import PlacementLUT
 from repro.core.solvers import PlacementSolver, make_solver
-
-_DEPRECATION_MSG = (
-    "direct TimeSliceScheduler(arch, model, ...) construction is "
-    "deprecated; build through repro.api.scheduler(substrate_name, ...) "
-    "instead (see DESIGN.md SS.5)")
-
 
 @dataclasses.dataclass
 class SliceReport:
@@ -60,17 +53,14 @@ class SliceReport:
 
 
 class TimeSliceScheduler:
-    def __init__(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
-                 t_slice_ns: float, rho: float = 1.0,
-                 lut: Optional[PlacementLUT] = None,
-                 initial_placement: Optional[Placement] = None,
-                 lut_points: int = 64):
-        # Legacy keyword-threaded constructor, kept one release for
-        # downstream scripts; repro.api.scheduler is the canonical path.
-        warnings.warn(_DEPRECATION_MSG, DeprecationWarning, stacklevel=2)
-        self._setup(arch, model, t_slice_ns=t_slice_ns, rho=rho, lut=lut,
-                    initial_placement=initial_placement,
-                    lut_points=lut_points)
+    def __init__(self, *args, **kw):
+        # The PR 2 keyword-threaded constructor finished its one-release
+        # deprecation window and is gone.
+        raise TypeError(
+            "direct TimeSliceScheduler(arch, model, ...) construction was "
+            "removed; build through repro.api.scheduler(substrate_name, "
+            "...) or TimeSliceScheduler.from_substrate(substrate, ...) "
+            "(DESIGN.md SS.5)")
 
     @classmethod
     def from_substrate(cls, substrate, workload=None, *,

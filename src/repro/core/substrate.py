@@ -25,6 +25,8 @@ one) - behind a string-keyed registry:
   ``cxl-tier-3``     THREE pools - HBM / node-DDR / CXL-attached far
                      (DVFS-scaled) - solved through the K-pool
                      min-plus combine (repro.core.multipool)
+  ``cxl-tier-3-mixed`` same, heterogeneous fleet shapes (odd engines
+                     get half of all THREE pools, floored at 1)
   ================== ==================================================
 
 Adding a backend is one :func:`register_substrate` call (DESIGN.md SS.5);
@@ -500,6 +502,13 @@ def _cxl3_factory(**kw) -> CXLTier3Substrate:
     return CXLTier3Substrate(**kw)
 
 
+def _cxl3_mixed_factory(**kw) -> CXLTier3Substrate:
+    # the generalized _POOL_FIELDS machinery halves all three pools for
+    # odd-indexed engines (floored at 1); variant_key() keeps half- and
+    # full-shape engines on separate LUT cache entries
+    return CXLTier3Substrate(name="cxl-tier-3-mixed", mixed=True, **kw)
+
+
 register_substrate("tpu-pool", _tpu_factory("tpu-pool", mixed=False))
 register_substrate("tpu-pool-mixed",
                    _tpu_factory("tpu-pool-mixed", mixed=True))
@@ -508,3 +517,4 @@ register_substrate("gpu-pool-mixed",
                    _gpu_factory("gpu-pool-mixed", mixed=True))
 register_substrate("cxl-tier", _cxl_factory)
 register_substrate("cxl-tier-3", _cxl3_factory)
+register_substrate("cxl-tier-3-mixed", _cxl3_mixed_factory)

@@ -5,23 +5,27 @@ N serve engines fed by realistic traffic: arrival traces
 (:mod:`repro.fleet.traces`), per-engine load forecasting
 (:mod:`repro.fleet.forecast`) driving *proactive* weight migration through
 the scheduler's ``lookup_tasks`` hook, an SLO-aware router with admission
-control (:mod:`repro.fleet.router`), and tail-latency/energy aggregation
-(:mod:`repro.fleet.metrics`).
+control (:mod:`repro.fleet.router`), the two-level cell router +
+autoscaler that scale the loop to hundreds->thousands of engines
+(:mod:`repro.fleet.hierarchy`, DESIGN.md SS.9), and tail-latency/energy
+aggregation (:mod:`repro.fleet.metrics`).
 
-Fleets are canonically constructed through ``repro.api.fleet`` (substrate
-registry + shared placement LUT per engine shape; optionally a real
-``HeteroServeEngine`` per worker so placements are functionally exercised
-by decoding tokens through re-tiered weights). ``build_fleet`` remains as
-a one-release deprecation shim over ``api.fleet("tpu-pool[-mixed]")``.
+Fleets are canonically constructed through ``repro.api.fleet`` (flat) and
+``repro.api.hierarchical_fleet`` (cells): substrate registry + shared
+placement LUT per engine shape; optionally a real ``HeteroServeEngine``
+per worker so placements are functionally exercised by decoding tokens
+through re-tiered weights.
 """
 from __future__ import annotations
 
-import warnings
-from typing import Optional
-
 from repro.fleet.forecast import (FORECASTERS, Forecaster,  # noqa: F401
                                   make_forecaster)
-from repro.fleet.metrics import FleetSummary, summarize  # noqa: F401
+from repro.fleet.hierarchy import (CELL_POLICIES,  # noqa: F401
+                                   AutoscaleConfig, Cell, CellAutoscaler,
+                                   CellRouter, HierarchicalFleet,
+                                   HierarchyResult, ScaleEvent)
+from repro.fleet.metrics import (FleetSummary, class_breakdown,  # noqa: F401
+                                 summarize)
 from repro.fleet.router import (POLICIES, EngineWorker,  # noqa: F401
                                 Fleet, FleetRequest, FleetResult,
                                 FleetRouter)
@@ -32,34 +36,7 @@ __all__ = [
     "Trace", "make_trace", "TRACES", "BURSTY",
     "Forecaster", "make_forecaster", "FORECASTERS",
     "EngineWorker", "FleetRouter", "Fleet", "FleetRequest", "FleetResult",
-    "POLICIES", "FleetSummary", "summarize", "build_fleet",
+    "POLICIES", "FleetSummary", "summarize", "class_breakdown",
+    "Cell", "CellRouter", "CellAutoscaler", "AutoscaleConfig",
+    "HierarchicalFleet", "HierarchyResult", "ScaleEvent", "CELL_POLICIES",
 ]
-
-
-def build_fleet(cfg=None, *, n_engines: int = 2, forecaster: str = "ewma",
-                policy: str = "slo", hp_chips: int = 4, lp_chips: int = 4,
-                mixed: bool = False, tokens_per_task: int = 2,
-                rho: float = 64.0, t_slice_ms: Optional[float] = None,
-                lut_points: int = 32, admission_limit: Optional[int] = None,
-                slo_slices: float = 2.0, forecast_margin: float = 1.0,
-                params=None, decode: bool = False, max_batch: int = 16,
-                forecaster_kw: Optional[dict] = None) -> Fleet:
-    """Deprecated shim: construct through ``repro.api.fleet`` instead.
-
-    ``mixed=True`` maps to the ``tpu-pool-mixed`` substrate (odd-indexed
-    engines get half the chips); everything else forwards unchanged.
-    """
-    warnings.warn(
-        "build_fleet is deprecated; use repro.api.fleet("
-        "'tpu-pool' / 'tpu-pool-mixed', ...) instead (DESIGN.md SS.5)",
-        DeprecationWarning, stacklevel=2)
-    from repro import api
-    return api.fleet(
-        "tpu-pool-mixed" if mixed else "tpu-pool", cfg,
-        n_engines=n_engines, forecaster=forecaster, policy=policy,
-        tokens_per_task=tokens_per_task, rho=rho, t_slice_ms=t_slice_ms,
-        lut_points=lut_points, admission_limit=admission_limit,
-        slo_slices=slo_slices, forecast_margin=forecast_margin,
-        params=params, decode=decode, max_batch=max_batch,
-        forecaster_kw=forecaster_kw,
-        n_hp_chips=hp_chips, n_lp_chips=lp_chips)

@@ -8,7 +8,7 @@ paper's evaluation cares about, lifted to fleet scale: tail latency
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -54,7 +54,53 @@ class FleetSummary:
         return dataclasses.asdict(self)
 
 
+def class_breakdown(res: FleetResult,
+                    budgets: Optional[Dict[str, float]] = None
+                    ) -> Dict[str, Dict]:
+    """Per-SLO-class outcome stats for a (possibly hierarchical) run.
+
+    ``budgets`` maps class -> SLO budget in slices (the
+    :class:`~repro.fleet.hierarchy.CellRouter` budgets); a class without
+    one is judged against the fleet-wide ``res.slo_ns``. Miss accounting
+    matches :func:`summarize`: rejected + unfinished requests count as
+    misses of their class."""
+    res = getattr(res, "result", res)
+    budgets = budgets or {}
+    default = budgets.get("default")
+    out: Dict[str, Dict] = {}
+    groups: Dict[str, Dict[str, list]] = {}
+    for r in res.completed:
+        groups.setdefault(r.slo_class, {"lat": [], "rej": 0, "unf": 0})[
+            "lat"].append(r.latency_ns)
+    for r in res.rejected:
+        groups.setdefault(r.slo_class, {"lat": [], "rej": 0, "unf": 0})[
+            "rej"] += 1
+    for r in res.unfinished:
+        groups.setdefault(r.slo_class, {"lat": [], "rej": 0, "unf": 0})[
+            "unf"] += 1
+    for cls, g in sorted(groups.items()):
+        budget = budgets.get(cls, default)
+        slo_ns = (budget * res.t_slice_ns if budget is not None
+                  else res.slo_ns)
+        lat = g["lat"]
+        n = len(lat) + g["rej"] + g["unf"]
+        misses = sum(l > slo_ns for l in lat) + g["rej"] + g["unf"]
+        out[cls] = {
+            "n_submitted": n,
+            "n_completed": len(lat),
+            "n_rejected": g["rej"],
+            "n_unfinished": g["unf"],
+            "slo_ms": slo_ns / 1e6,
+            "deadline_miss_rate": misses / n if n else 0.0,
+            "p99_ms": (percentile([l / 1e6 for l in lat], 99)
+                       if lat else 0.0),
+        }
+    return out
+
+
 def summarize(res: FleetResult) -> FleetSummary:
+    # a HierarchyResult wraps its FleetResult; accept both
+    res = getattr(res, "result", res)
     lat_ms = [r.latency_ns / 1e6 for r in res.completed]
     slo_ms = res.slo_ns / 1e6
     n_sub = (len(res.completed) + len(res.rejected)

@@ -46,6 +46,10 @@ class FleetRequest:
     rejected: bool = False
     slo_class: str = "default"    # per-class SLO/queue-wait attribution
     admission: Optional[str] = None   # ADMIT_* outcome stamped by the router
+    # hierarchical routing (repro.fleet.hierarchy): cell id + the wait the
+    # global tier predicted at admission (feeds the cell's bias EWMA)
+    cell: Optional[int] = None
+    wait_est: Optional[float] = None
 
 
 class EngineWorker:

@@ -7,18 +7,26 @@ weight migration, SLO-aware routing with optional admission control.
     python -m repro.launch.fleet --workload mmpp --engines 2 --requests 32
     python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...
     python -m repro.launch.fleet --substrate cxl-tier-3 \\
-        --compiler-stats --lut-cache ckpt/luts.json ...   # warm-start
+        --lut-cache ckpt/luts.json ...                    # warm-start
     python -m repro.launch.fleet --trace --flight-recorder ...  # DESIGN SS.8
+    python -m repro.launch.fleet --cells 16 --engines 128 \\
+        --autoscale --max-engines 512 --no-decode          # DESIGN SS.9
+
+``--cells N`` switches to the two-level hierarchical fleet
+(:mod:`repro.fleet.hierarchy`): ``--engines`` becomes the total initial
+engine count split evenly across N cells, the global tier routes by
+queue-aware per-class scoring, and ``--autoscale`` attaches the cell
+autoscaler (``--max-engines`` caps the total; scale-ups are served from
+placement-compiler warm starts, so the ``lut-cache:`` line must report
+0 builds on a warm run). The hierarchical path is analytic-only.
 
 ``--trace [PATH]`` turns on the observability layer (repro.obs) and
 writes a Perfetto-loadable ``trace.json`` plus a ``metrics.json``
 snapshot after the run; ``--flight-recorder [PATH]`` arms the SLO-breach
 flight recorder (ring buffer of per-slice fleet state, dumped as JSON
 when the running deadline-miss rate crosses ``--miss-threshold``).
-``--trace NAME`` with an arrival-trace name still selects the workload
-for one release; ``--workload`` is the canonical spelling.
 
-With ``--decode`` (default) every worker carries a real
+With ``--decode`` (default on the flat path) every worker carries a real
 ``HeteroServeEngine``: each slice's placement is applied as an actual
 weight re-tiering and tokens are decoded through the tiered model on CPU.
 ``--no-decode`` runs the analytic scheduler/energy path only (fast; what
@@ -33,27 +41,21 @@ from pathlib import Path
 from repro import api, obs
 from repro.fleet import make_trace, summarize
 from repro.fleet.forecast import FORECASTERS
+from repro.fleet.hierarchy import CELL_POLICIES
 from repro.fleet.router import POLICIES
 from repro.fleet.traces import TRACES
 
 
-def _is_workload_name(value: str) -> bool:
-    return value in TRACES or value.startswith("case")
-
-
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--workload", default=None,
+    ap.add_argument("--workload", default="mmpp",
                     help=f"arrival trace: one of {sorted(TRACES)} or a "
                          f"case* scenario (default mmpp)")
     ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
                     metavar="PATH",
                     help="enable structured tracing; write Chrome "
                          "trace-event JSON to PATH (default trace.json, "
-                         "with a metrics.json snapshot alongside). "
-                         "Passing an arrival-trace NAME here still "
-                         "selects the workload (deprecated; use "
-                         "--workload)")
+                         "with a metrics.json snapshot alongside)")
     ap.add_argument("--flight-recorder", nargs="?", const="flight.json",
                     default=None, metavar="PATH",
                     help="arm the SLO-breach flight recorder; dump the "
@@ -63,7 +65,19 @@ def main(argv=None) -> None:
     ap.add_argument("--flight-capacity", type=int, default=32)
     ap.add_argument("--miss-threshold", type=float, default=0.3,
                     help="flight-recorder deadline-miss-rate trigger")
-    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--engines", type=int, default=2,
+                    help="engine count (with --cells: total across cells)")
+    ap.add_argument("--cells", type=int, default=None, metavar="N",
+                    help="hierarchical fleet with N cells (two-level "
+                         "router + per-class SLO admission; DESIGN SS.9)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="attach the cell autoscaler (requires --cells)")
+    ap.add_argument("--max-engines", type=int, default=None,
+                    help="autoscale ceiling, total across cells "
+                         "(default: --engines, i.e. no growth)")
+    ap.add_argument("--cell-policy", default="least_loaded",
+                    choices=CELL_POLICIES,
+                    help="engine selection inside a cell")
     ap.add_argument("--requests", type=int, default=None,
                     help="total request budget (truncates the trace)")
     ap.add_argument("--steps", type=int, default=25,
@@ -74,7 +88,8 @@ def main(argv=None) -> None:
     ap.add_argument("--margin", type=float, default=1.0,
                     help="forecast over-provisioning factor")
     ap.add_argument("--admission-limit", type=int, default=None,
-                    help="max queued tasks per engine before rejecting")
+                    help="max queued tasks per engine before rejecting "
+                         "(flat fleet; --cells admits by expected wait)")
     ap.add_argument("--substrate", default=None,
                     help=f"one of {api.available_substrates()} "
                          f"(default tpu-pool; --mixed => tpu-pool-mixed)")
@@ -91,11 +106,6 @@ def main(argv=None) -> None:
     ap.add_argument("--decode", dest="decode", action="store_true",
                     default=True)
     ap.add_argument("--no-decode", dest="decode", action="store_false")
-    ap.add_argument("--compiler-stats", action="store_true",
-                    help="report PlacementCompiler builds/hits/entries "
-                         "after the run (deprecated shim: the counters "
-                         "now live in the repro.obs metrics registry - "
-                         "see --trace / metrics.json; kept one release)")
     ap.add_argument("--lut-cache", default=None, metavar="PATH",
                     help="warm-start: load the placement-compiler LUT "
                          "cache from PATH when it exists and save it back "
@@ -106,26 +116,10 @@ def main(argv=None) -> None:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
-    # --trace NAME legacy shim: an arrival-trace name selects the
-    # workload (pre-observability CLI syntax), anything else is the
-    # tracing output path
-    workload = args.workload
-    trace_out = None
-    if args.trace is not None:
-        if args.trace != "trace.json" and _is_workload_name(args.trace):
-            if workload is None:
-                print(f"note: '--trace {args.trace}' selects the arrival "
-                      f"trace; use --workload (kept one release)")
-                workload = args.trace
-            else:
-                raise SystemExit(f"--trace {args.trace} conflicts with "
-                                 f"--workload {workload}; --trace PATH "
-                                 f"is the tracing output file")
-        else:
-            trace_out = args.trace
-    workload = workload or "mmpp"
+    if args.autoscale and args.cells is None:
+        raise SystemExit("--autoscale requires --cells")
 
-    obs_on = trace_out is not None or args.flight_recorder is not None
+    obs_on = args.trace is not None or args.flight_recorder is not None
     if obs_on:
         obs.reset()
         rec = None
@@ -136,7 +130,7 @@ def main(argv=None) -> None:
                 path=args.flight_recorder)
         obs.enable(flight_recorder=rec)
 
-    trace = make_trace(workload, n_slices=args.steps, seed=args.seed)
+    trace = make_trace(args.workload, n_slices=args.steps, seed=args.seed)
     if args.requests is not None:
         trace = trace.truncated(args.requests)
 
@@ -155,6 +149,11 @@ def main(argv=None) -> None:
                              f"of the gpu-pool and cxl-tier substrates; it "
                              f"does not apply to --substrate {substrate}")
         over["lp_clock"] = args.dvfs
+    if args.decode and args.cells is not None:
+        if not args.quiet:
+            print("hierarchical fleets run the analytic path only; "
+                  "running as --no-decode")
+        args.decode = False
     if args.decode and not api.substrate(substrate).supports_decode:
         print(f"substrate {substrate} is accounting-only (no functional "
               f"decode engine); running as --no-decode")
@@ -170,41 +169,75 @@ def main(argv=None) -> None:
         print(f"arch={canonical(args.arch)} ({cfg.n_layers}L "
               f"d={cfg.d_model}, reduced config)")
 
-    pc = None
-    if args.compiler_stats or args.lut_cache:
-        pc = api.compiler()
-        if args.lut_cache:
-            n = pc.load(args.lut_cache)
-            if n:
-                print(f"warm-start: loaded {n} cached LUTs from "
-                      f"{args.lut_cache}")
+    pc = api.compiler()
+    if args.lut_cache:
+        n = pc.load(args.lut_cache)
+        if n:
+            print(f"warm-start: loaded {n} cached LUTs from "
+                  f"{args.lut_cache}")
 
-    fleet = api.fleet(
-        substrate, cfg, n_engines=args.engines, forecaster=args.forecaster,
-        policy=args.policy, tokens_per_task=args.tokens_per_task,
-        admission_limit=args.admission_limit,
-        forecast_margin=args.margin, params=params, decode=args.decode,
-        compiler=pc, **over)
+    hier = None
+    if args.cells is not None:
+        per_cell = max(args.engines // args.cells, 1)
+        max_per_cell = (per_cell if args.max_engines is None
+                        else max(args.max_engines // args.cells, per_cell))
+        hier = api.hierarchical_fleet(
+            substrate, cfg, n_cells=args.cells,
+            engines_per_cell=per_cell, forecaster=args.forecaster,
+            cell_policy=args.cell_policy,
+            autoscale=args.autoscale, max_engines=max_per_cell,
+            tokens_per_task=args.tokens_per_task,
+            forecast_margin=args.margin, compiler=pc, seed=args.seed,
+            **over)
+        n_engines = hier.n_engines
+        T_us = hier.cells[0].t_slice_ns / 1e3
+        print(f"fleet: {args.cells} cells x {per_cell} engines "
+              f"({n_engines} total) on {substrate}, "
+              f"cell-policy={args.cell_policy}, "
+              f"autoscale={'on' if args.autoscale else 'off'}"
+              f"{f' (ceiling {max_per_cell * args.cells})' if args.autoscale else ''}, "
+              f"forecaster={args.forecaster}, t_slice={T_us:.2f} us, "
+              f"trace={trace.name} ({trace.total} requests / "
+              f"{len(trace)} slices, peak {trace.peak}/slice)")
 
-    T_us = fleet.workers[0].t_slice_ns / 1e3
-    print(f"fleet: {args.engines} engines on {substrate}"
-          f", policy={args.policy}, forecaster={args.forecaster}, "
-          f"t_slice={T_us:.2f} us, trace={trace.name} "
-          f"({trace.total} requests / {len(trace)} slices, "
-          f"peak {trace.peak}/slice)")
+        def cb(s, n_arr, done, cells):
+            if args.quiet:
+                return
+            bl = "/".join(str(c.backlog) for c in cells)
+            eng = "/".join(str(c.n_active) for c in cells)
+            print(f"  slice {s:3d} arrivals {n_arr:4d} done "
+                  f"{len(done):4d} backlog {bl} engines {eng}")
 
-    def cb(s, n_arr, done, workers):
-        if args.quiet:
-            return
-        bl = "/".join(str(len(w.backlog)) for w in workers)
-        mig = "/".join(
-            "y" if (w.reports and w.reports[-1].moved_weights) else "."
-            for w in workers)
-        print(f"  slice {s:3d} arrivals {n_arr:3d} done {len(done):3d} "
-              f"backlog {bl:12s} migrated {mig}")
+        res = hier.run(trace, verbose_cb=cb)
+        s = summarize(res)
+    else:
+        fleet = api.fleet(
+            substrate, cfg, n_engines=args.engines,
+            forecaster=args.forecaster, policy=args.policy,
+            tokens_per_task=args.tokens_per_task,
+            admission_limit=args.admission_limit,
+            forecast_margin=args.margin, params=params,
+            decode=args.decode, compiler=pc, **over)
 
-    res = fleet.run(trace, verbose_cb=cb)
-    s = summarize(res)
+        T_us = fleet.workers[0].t_slice_ns / 1e3
+        print(f"fleet: {args.engines} engines on {substrate}"
+              f", policy={args.policy}, forecaster={args.forecaster}, "
+              f"t_slice={T_us:.2f} us, trace={trace.name} "
+              f"({trace.total} requests / {len(trace)} slices, "
+              f"peak {trace.peak}/slice)")
+
+        def cb(s, n_arr, done, workers):
+            if args.quiet:
+                return
+            bl = "/".join(str(len(w.backlog)) for w in workers)
+            mig = "/".join(
+                "y" if (w.reports and w.reports[-1].moved_weights) else "."
+                for w in workers)
+            print(f"  slice {s:3d} arrivals {n_arr:3d} done {len(done):3d} "
+                  f"backlog {bl:12s} migrated {mig}")
+
+        res = fleet.run(trace, verbose_cb=cb)
+        s = summarize(res)
     print(f"completed {s.n_completed}/{s.n_submitted} "
           f"(rejected {s.n_rejected}) over {s.n_slices} slices")
     print(f"latency   p50 {s.p50_ms * 1e3:.2f} us | "
@@ -215,17 +248,18 @@ def main(argv=None) -> None:
           f"{s.energy_per_token_uj:.2f} uJ/token over {s.tokens} tokens")
     print(f"placement {s.migrations} migrating slices, "
           f"{s.weights_moved} weights moved")
-    if pc is not None:
-        if args.lut_cache:
-            pc.save(args.lut_cache)
-            print(f"lut-cache: saved {len(pc)} LUTs to {args.lut_cache}")
-        if args.compiler_stats:
-            # deprecated shim: same fields, now sourced from the metrics
-            # registry the compiler mirrors its cache traffic into
-            reg = obs.metrics()
-            print(f"compiler  {reg.value('compiler.lut.build')} builds, "
-                  f"{reg.value('compiler.lut.hit')} hits, "
-                  f"{len(pc)} cached LUTs")
+    if hier is not None and args.autoscale:
+        print(f"autoscale {res.n_scale_ups} up / {res.n_scale_downs} down, "
+              f"engines {res.n_engines_start} -> peak "
+              f"{res.n_engines_peak} -> end {res.n_engines_end}, "
+              f"scale-up LUT builds {res.scale_up_builds}")
+    # the compiler's cache traffic, printed unconditionally: warm-started
+    # runs (and autoscaler scale-ups) must show "0 builds" here
+    print(f"lut-cache: {len(pc)} LUTs ({pc.n_builds} builds, "
+          f"{pc.n_hits} hits, {pc.n_loaded} loaded)")
+    if args.lut_cache:
+        pc.save(args.lut_cache)
+        print(f"lut-cache: saved {len(pc)} LUTs to {args.lut_cache}")
     if obs_on:
         rec = obs.flight_recorder()
         if rec is not None:
@@ -236,10 +270,10 @@ def main(argv=None) -> None:
             else:
                 print(f"flight-recorder: no SLO breach "
                       f"({len(rec)} frames buffered)")
-        if trace_out is not None:
+        if args.trace is not None:
             paths = obs.export(
-                trace_path=trace_out,
-                metrics_path=Path(trace_out).with_name("metrics.json"))
+                trace_path=args.trace,
+                metrics_path=Path(args.trace).with_name("metrics.json"))
             print(f"wrote {paths['trace']} ({len(obs.tracer())} events; "
                   f"load at ui.perfetto.dev) and {paths['metrics']}")
     if args.json:

@@ -23,9 +23,9 @@ added cost is one predicate per site and **no** allocation:
         ...
         obs.complete("sched.slice", t0, args={...}, tid=wid)
 
-Rare events (a compiler LUT build, a weight migration) may write
-through :func:`metrics` unconditionally; that is what keeps the
-``--compiler-stats`` shim truthful even with tracing off.
+Rare events (a compiler LUT build, an autoscaler scale event) may write
+through :func:`metrics` unconditionally; that is what keeps the fleet
+CLI's lut-cache/autoscale reporting truthful even with tracing off.
 
 Enable with :func:`enable` (optionally attaching a
 :class:`~repro.obs.flight.FlightRecorder`), read back through

@@ -17,6 +17,7 @@ guard on ``repro.obs.enabled()``.
 from __future__ import annotations
 
 import bisect
+import math
 import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -83,6 +84,37 @@ class Histogram:
         self.count += 1
         self.min = min(self.min, v)
         self.max = max(self.max, v)
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Bucket-resolution quantile (``q`` in [0, 100]): the upper
+        bound of the bucket holding the nearest-rank observation, or the
+        observed max for the +inf overflow slot. None when empty.
+        Resolution is the bucket grid - good enough for the autoscaler /
+        bench wait-distribution summaries it feeds."""
+        if not self.count:
+            return None
+        rank = max(int(math.ceil(q / 100.0 * self.count)), 1)
+        acc = 0
+        for i, n in enumerate(self.counts):
+            acc += n
+            if acc >= rank:
+                return (self.buckets[i] if i < len(self.buckets)
+                        else self.max)
+        return self.max
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold another histogram with the SAME bucket grid into this
+        one (per-cell wait histograms -> one fleet-wide distribution)."""
+        if other.buckets != self.buckets:
+            raise ValueError(f"bucket grids differ: {self.buckets} vs "
+                             f"{other.buckets}")
+        for i, n in enumerate(other.counts):
+            self.counts[i] += n
+        self.sum += other.sum
+        self.count += other.count
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
 
     def as_dict(self) -> Dict[str, Any]:
         return {"buckets": list(self.buckets),

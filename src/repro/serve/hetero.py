@@ -95,7 +95,7 @@ def default_t_slice_ms(arch: sp.PIMArch, model: sp.ModelSpec, *,
                        rho: float, peak_tasks: int = 10) -> float:
     """Slice sized as the paper sizes T: fits ``peak_tasks`` tasks at peak
     performance, plus 1% headroom to absorb a migration. Shared by
-    ``HeteroServeEngine`` and ``repro.fleet.build_fleet``."""
+    ``HeteroServeEngine`` and the ``repro.api`` fleet constructors."""
     from repro.core.energy import EnergyModel
     em = EnergyModel(arch, model, rho=rho)
     t_peak = em.task_cost(em.peak_placement(True)).t_task_ns

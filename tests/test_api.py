@@ -1,6 +1,7 @@
 """Tests for the repro.api facade: substrate/solver registries,
-equivalence of the facade construction path with the legacy constructors,
-and the one-release deprecation shims."""
+equivalence of the facade construction path with the canonical
+``from_substrate`` constructor, and the removal of the retired
+one-release deprecation shims."""
 import warnings
 
 import pytest
@@ -17,14 +18,8 @@ EDGE_SUBSTRATES = ("edge-hhpim", "edge-hetero", "edge-hybrid",
                    "edge-baseline")
 TPU_SUBSTRATES = ("tpu-pool", "tpu-pool-mixed")
 GPU_SUBSTRATES = ("gpu-pool", "gpu-pool-mixed")
-CXL_SUBSTRATES = ("cxl-tier", "cxl-tier-3")
+CXL_SUBSTRATES = ("cxl-tier", "cxl-tier-3", "cxl-tier-3-mixed")
 FIXED_SOLVERS = ("fixed-baseline", "fixed-hetero", "fixed-hybrid")
-
-
-def _legacy(arch, model, T, **kw):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return TimeSliceScheduler(arch, model, t_slice_ns=T, **kw)
 
 
 # -- registries --------------------------------------------------------------
@@ -78,32 +73,38 @@ def test_fixed_solvers_build_single_entry_luts():
         assert lut.lookup(1e9).placement == lut.entries[0].placement
 
 
-# -- equivalence: facade path vs legacy constructors -------------------------
+# -- equivalence: facade path vs the canonical constructor -------------------
 
 
-def test_edge_hhpim_lut_and_reports_match_legacy():
+def test_edge_hhpim_lut_and_reports_match_from_substrate():
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    legacy = _legacy(sp.hh_pim(), m, T, rho=RHO, lut_points=24)
+    ref = TimeSliceScheduler.from_substrate(
+        api.substrate("edge-hhpim", rho=RHO), m, t_slice_ns=T, rho=RHO,
+        lut_points=24)
     new = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
                         lut_points=24)
-    assert legacy.lut.entries == new.lut.entries  # byte-identical LUT
+    assert ref.lut.entries == new.lut.entries     # byte-identical LUT
     loads = workloads.SCENARIOS["case6_random"][:12]
-    assert [legacy.step(n) for n in loads] == [new.step(n) for n in loads]
+    assert [ref.step(n) for n in loads] == [new.step(n) for n in loads]
 
 
-def test_tpu_pool_lut_and_reports_match_legacy():
+def test_tpu_pool_lut_and_reports_match_from_substrate():
     from repro.configs import get_smoke_config
     from repro.serve.hetero import (default_t_slice_ms, tpu_arch,
                                     tpu_model_spec)
     cfg = get_smoke_config("internlm2_1_8b")
-    model = tpu_model_spec(cfg, 2)
-    T = default_t_slice_ms(tpu_arch(), model, rho=64.0, peak_tasks=10) * 1e6
-    legacy = _legacy(tpu_arch(), model, T, rho=64.0, lut_points=32)
+    sub = api.substrate("tpu-pool", tokens_per_task=2)
+    model = sub.model_spec(cfg)
+    # the substrate's sizing matches the serve-layer helper it wraps
+    T = default_t_slice_ms(tpu_arch(), tpu_model_spec(cfg, 2), rho=64.0,
+                           peak_tasks=10) * 1e6
+    ref = TimeSliceScheduler.from_substrate(sub, model, t_slice_ns=T,
+                                            lut_points=32)
     new = api.scheduler("tpu-pool", cfg, tokens_per_task=2, lut_points=32)
     assert new.t_slice_ns == pytest.approx(T, rel=0, abs=0)
-    assert legacy.lut.entries == new.lut.entries
-    assert [legacy.step(n) for n in (4, 1, 8)] == \
+    assert ref.lut.entries == new.lut.entries
+    assert [ref.step(n) for n in (4, 1, 8)] == \
         [new.step(n) for n in (4, 1, 8)]
 
 
@@ -216,16 +217,15 @@ def test_dp_and_closed_form_agree_on_paper_cases():
         assert dp.energy_uj == pytest.approx(cf.energy_uj, rel=0.10), scen
 
 
-def test_api_fleet_matches_legacy_build_fleet():
-    from repro.fleet import build_fleet, summarize
+def test_api_fleet_registry_name_matches_substrate_instance():
+    from repro.fleet import summarize
     from repro.fleet.traces import replay_trace
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        legacy = build_fleet(n_engines=2, forecaster="none", mixed=True)
-    new = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none")
-    s_legacy = summarize(legacy.run(replay_trace([8, 8, 8, 8])))
-    s_new = summarize(new.run(replay_trace([8, 8, 8, 8])))
-    assert s_legacy == s_new
+    by_name = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none")
+    by_inst = api.fleet(api.substrate("tpu-pool-mixed", tokens_per_task=2),
+                        n_engines=2, forecaster="none")
+    s_name = summarize(by_name.run(replay_trace([8, 8, 8, 8])))
+    s_inst = summarize(by_inst.run(replay_trace([8, 8, 8, 8])))
+    assert s_name == s_inst
 
 
 # -- batched placement compiler ----------------------------------------------
@@ -259,7 +259,8 @@ def test_compiler_dedupes_fleet_shapes_and_serves_cache_hits():
     luts = pc.compile(variants, model, t_slice_ns=T, n_points=8)
     # 6 engines, 2 distinct shapes -> 2 builds, one LUT per shape
     assert len(luts) == 2
-    assert pc.stats() == {"entries": 2, "builds": 2, "hits": 0}
+    assert pc.stats() == {"entries": 2, "builds": 2, "hits": 0,
+                          "loaded": 0}
     # a second fleet on the same shapes is served entirely from cache
     again = pc.compile(variants, model, t_slice_ns=T, n_points=8)
     assert pc.n_builds == 2 and pc.n_hits == 2
@@ -336,39 +337,29 @@ def test_fleet_with_compiler_matches_fleet_without():
     assert s_plain == s_shared
 
 
-# -- deprecation shims -------------------------------------------------------
+# -- retired deprecation shims (one-release window elapsed) ------------------
 
 
-def test_legacy_scheduler_constructor_warns_once_and_works():
+def test_direct_scheduler_construction_is_removed():
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    with pytest.warns(DeprecationWarning) as rec:
-        sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                                   lut_points=8)
-    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
-    assert sched.step(2).deadline_met
+    with pytest.raises(TypeError, match="from_substrate"):
+        TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
+                           lut_points=8)
 
 
-def test_legacy_make_baseline_scheduler_warns_once_and_works():
-    from repro.core.baselines import make_baseline_scheduler
-    m = sp.EFFICIENTNET_B0
-    T = default_t_slice_ns(m, RHO)
-    with pytest.warns(DeprecationWarning) as rec:
-        sched = make_baseline_scheduler("hybrid", m, t_slice_ns=T, rho=RHO)
-    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
-    assert sched.step(2).n_tasks == 2
-    with pytest.raises(ValueError):
-        make_baseline_scheduler("nope", m, t_slice_ns=T)
+def test_make_baseline_scheduler_is_removed():
+    import repro.core.baselines as baselines
+    assert not hasattr(baselines, "make_baseline_scheduler")
+    with pytest.raises(ImportError):
+        from repro.core.baselines import make_baseline_scheduler  # noqa
 
 
-def test_legacy_build_fleet_warns_once_and_works():
-    from repro.fleet import build_fleet
-    from repro.fleet.traces import replay_trace
-    with pytest.warns(DeprecationWarning) as rec:
-        fleet = build_fleet(n_engines=1, forecaster="none")
-    assert len([w for w in rec if w.category is DeprecationWarning]) == 1
-    res = fleet.run(replay_trace([2, 1]))
-    assert len(res.completed) == 3
+def test_build_fleet_is_removed():
+    import repro.fleet as fleet_pkg
+    assert not hasattr(fleet_pkg, "build_fleet")
+    with pytest.raises(ImportError):
+        from repro.fleet import build_fleet  # noqa
 
 
 def test_facade_path_emits_no_deprecation_warnings():

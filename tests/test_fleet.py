@@ -3,9 +3,9 @@ predicted-load hook, routing/admission, and end-to-end fleet runs."""
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import workloads
-from repro.fleet import (Fleet, build_fleet, make_forecaster, make_trace,
-                         summarize)
+from repro.fleet import Fleet, make_forecaster, make_trace, summarize
 from repro.fleet.forecast import AR1, EWMA, Holt, LastValue, NoForecast
 from repro.fleet.router import FleetRequest
 from repro.fleet.traces import TRACES, replay_trace
@@ -118,8 +118,8 @@ def test_make_forecaster_unknown_raises():
 def test_lookup_tasks_preprovisions_fast_placement():
     """Looking up a high predicted load on a quiet slice must choose a
     placement at least as fast as the reactive one."""
-    f1 = build_fleet(n_engines=1, forecaster="none")
-    f2 = build_fleet(n_engines=1, forecaster="none")
+    f1 = api.fleet("tpu-pool", n_engines=1, forecaster="none")
+    f2 = api.fleet("tpu-pool", n_engines=1, forecaster="none")
     s1 = f1.workers[0].sched
     s2 = f2.workers[0].sched
     r1 = s1.step(2)
@@ -133,7 +133,7 @@ def test_lookup_tasks_preprovisions_fast_placement():
 
 
 def test_cap_to_capacity_limits_executed_tasks():
-    fleet = build_fleet(n_engines=1, forecaster="none")
+    fleet = api.fleet("tpu-pool", n_engines=1, forecaster="none")
     sched = fleet.workers[0].sched
     rep = sched.step(500, cap_to_capacity=True)
     assert rep.n_executed is not None
@@ -145,7 +145,7 @@ def test_cap_to_capacity_limits_executed_tasks():
 
 
 def test_step_without_hook_unchanged():
-    fleet = build_fleet(n_engines=1, forecaster="none")
+    fleet = api.fleet("tpu-pool", n_engines=1, forecaster="none")
     sched = fleet.workers[0].sched
     rep = sched.step(5)
     assert rep.n_done == rep.n_tasks == 5
@@ -156,8 +156,8 @@ def test_step_without_hook_unchanged():
 
 
 def test_least_loaded_routing_balances_backlogs():
-    fleet = build_fleet(n_engines=2, forecaster="none",
-                        policy="least_loaded")
+    fleet = api.fleet("tpu-pool", n_engines=2, forecaster="none",
+                      policy="least_loaded")
     tr = replay_trace([10, 10])
     fleet.run(tr)
     reports = fleet.workers[0].reports, fleet.workers[1].reports
@@ -166,8 +166,8 @@ def test_least_loaded_routing_balances_backlogs():
 
 
 def test_slo_routing_prefers_faster_engine_in_mixed_fleet():
-    fleet = build_fleet(n_engines=2, forecaster="none", mixed=True,
-                        policy="slo")
+    fleet = api.fleet("tpu-pool-mixed", n_engines=2, forecaster="none",
+                      policy="slo")
     tr = replay_trace([8, 8, 8, 8])
     res = fleet.run(tr)
     big = sum(r.n_tasks for r in fleet.workers[0].reports)
@@ -177,7 +177,8 @@ def test_slo_routing_prefers_faster_engine_in_mixed_fleet():
 
 
 def test_admission_control_rejects_over_limit():
-    fleet = build_fleet(n_engines=1, forecaster="none", admission_limit=4)
+    fleet = api.fleet("tpu-pool", n_engines=1, forecaster="none",
+                      admission_limit=4)
     tr = replay_trace([10, 0, 0, 0, 0, 0])
     res = fleet.run(tr)
     assert len(res.rejected) == 6     # queue cap 4 of 10 arrivals
@@ -189,7 +190,7 @@ def test_admission_control_rejects_over_limit():
 
 def test_fleet_conserves_requests_and_stamps_latency():
     tr = make_trace("mmpp", n_slices=20, seed=0)
-    fleet = build_fleet(n_engines=2, forecaster="ewma")
+    fleet = api.fleet("tpu-pool", n_engines=2, forecaster="ewma")
     res = fleet.run(tr)
     assert (len(res.completed) + len(res.rejected)
             + len(res.unfinished) == tr.total)
@@ -205,7 +206,7 @@ def test_fleet_conserves_requests_and_stamps_latency():
 
 def test_fleet_meets_slo_under_light_load():
     tr = replay_trace([2] * 15)
-    fleet = build_fleet(n_engines=2, forecaster="none")
+    fleet = api.fleet("tpu-pool", n_engines=2, forecaster="none")
     s = summarize(fleet.run(tr))
     assert s.deadline_miss_rate == 0.0
     assert s.p99_ms <= s.slo_ms
@@ -214,7 +215,7 @@ def test_fleet_meets_slo_under_light_load():
 def test_unfinished_backlog_counts_as_misses():
     """Requests still queued at the drain cutoff must not vanish from the
     accounting - they count as submitted and as SLO misses."""
-    fleet = build_fleet(n_engines=1, forecaster="none")
+    fleet = api.fleet("tpu-pool", n_engines=1, forecaster="none")
     res = fleet.run(replay_trace([200]), max_drain_slices=2)
     assert res.unfinished
     s = summarize(res)
@@ -236,15 +237,17 @@ def test_forecasting_cuts_miss_rate_on_bursty_trace():
     """The benchmark's headline claim, pinned on a deterministic seed: a
     trend-aware forecaster beats the reactive baseline on ramping load."""
     tr = make_trace("ramp", n_slices=40, seed=1, end=12)
-    reactive = summarize(build_fleet(n_engines=1, forecaster="none").run(tr))
-    proactive = summarize(build_fleet(n_engines=1, forecaster="ewma",
-                                      forecast_margin=1.3).run(tr))
+    reactive = summarize(
+        api.fleet("tpu-pool", n_engines=1, forecaster="none").run(tr))
+    proactive = summarize(
+        api.fleet("tpu-pool", n_engines=1, forecaster="ewma",
+                  forecast_margin=1.3).run(tr))
     assert proactive.deadline_miss_rate < reactive.deadline_miss_rate
 
 
 def test_invalid_policy_and_empty_fleet_raise():
     with pytest.raises(ValueError):
-        build_fleet(n_engines=1, policy="fastest")
+        api.fleet("tpu-pool", n_engines=1, policy="fastest")
     with pytest.raises(ValueError):
         Fleet([])
 
@@ -257,8 +260,8 @@ def test_fleet_with_decode_exercises_tiered_weights():
     from repro.models import lm
     cfg = get_smoke_config("internlm2_1_8b")
     params = lm.init_lm(jax.random.PRNGKey(0), cfg)
-    fleet = build_fleet(cfg, n_engines=1, forecaster="ewma", params=params,
-                        decode=True)
+    fleet = api.fleet("tpu-pool", cfg, n_engines=1, forecaster="ewma",
+                      params=params, decode=True)
     tr = replay_trace([3, 2])
     res = fleet.run(tr)
     assert len(res.completed) == 5
@@ -281,7 +284,8 @@ def test_degenerate_summary_zero_completions_has_no_nans():
     import json
     import math
 
-    fleet = build_fleet(n_engines=1, forecaster="none", admission_limit=0)
+    fleet = api.fleet("tpu-pool", n_engines=1, forecaster="none",
+                      admission_limit=0)
     s = summarize(fleet.run(replay_trace([3, 2])))
     assert s.degenerate and s.n_completed == 0
     assert s.n_rejected == 5 and s.deadline_miss_rate == 1.0
@@ -293,6 +297,6 @@ def test_degenerate_summary_zero_completions_has_no_nans():
 
 
 def test_normal_summary_is_not_degenerate():
-    fleet = build_fleet(n_engines=2, forecaster="none")
+    fleet = api.fleet("tpu-pool", n_engines=2, forecaster="none")
     s = summarize(fleet.run(replay_trace([2] * 10)))
     assert not s.degenerate and s.n_completed > 0

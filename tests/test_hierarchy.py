@@ -1,0 +1,301 @@
+"""Tests for the hierarchical fleet (repro.fleet.hierarchy): cells,
+two-level routing with per-class SLO budgets, autoscaler hysteresis,
+warm-start scale-ups, and the supporting obs/registry pieces."""
+import json
+
+import pytest
+
+from repro import api, obs
+from repro.fleet import (AutoscaleConfig, Cell, CellAutoscaler, CellRouter,
+                         HierarchicalFleet, class_breakdown, make_trace,
+                         summarize)
+from repro.fleet.hierarchy import REASON_BUDGET
+from repro.fleet.router import ADMIT_ACCEPT, ADMIT_REJECT, FleetRequest
+from repro.fleet.traces import replay_trace
+
+
+def _one_cell_router(budgets=None, **kw):
+    fl = api.fleet("tpu-pool", n_engines=1, forecaster="none")
+    cell = Cell(0, fl.workers, tokens_per_task=2)
+    router = CellRouter([cell], budgets=budgets, **kw)
+    router.refresh()
+    return cell, router
+
+
+# -- construction contracts --------------------------------------------------
+
+
+def test_empty_cell_and_empty_fleet_raise():
+    with pytest.raises(ValueError):
+        Cell(0, [])
+    with pytest.raises(ValueError):
+        HierarchicalFleet([])
+    with pytest.raises(ValueError):
+        api.hierarchical_fleet("tpu-pool", n_cells=1, engines_per_cell=1,
+                               cell_policy="fastest")
+
+
+def test_cxl_tier3_mixed_registered_and_halves_three_pools():
+    assert "cxl-tier-3-mixed" in api.SUBSTRATES
+    sub = api.substrate("cxl-tier-3-mixed")
+    big = sub.engine_variant(0)
+    small = sub.engine_variant(1)
+    assert (big.n_hbm_nodes, big.n_ddr_nodes, big.n_cxl_nodes) == (2, 4, 4)
+    assert (small.n_hbm_nodes, small.n_ddr_nodes,
+            small.n_cxl_nodes) == (1, 2, 2)
+    assert big.variant_key() != small.variant_key()
+
+
+def test_hierarchical_fleet_cycles_substrates_across_cells():
+    hier = api.hierarchical_fleet(["tpu-pool", "gpu-pool"], n_cells=2,
+                                  engines_per_cell=1)
+    names = [c.substrate.name for c in hier.cells]
+    assert names == ["tpu-pool", "gpu-pool"]
+
+
+# -- cell queue model --------------------------------------------------------
+
+
+def test_cell_expected_wait_grows_with_backlog():
+    cell, router = _one_cell_router()
+    w0 = cell.expected_wait_slices(0)
+    for rid in range(12):
+        cell.dispatch(FleetRequest(rid=rid, arrival_slice=0))
+    assert cell.backlog == 12
+    assert cell.expected_wait_slices(0) > w0
+
+
+def test_cell_dispatch_least_loaded_balances():
+    fl = api.fleet("tpu-pool", n_engines=2, forecaster="none")
+    cell = Cell(0, fl.workers, tokens_per_task=2)
+    for rid in range(6):
+        cell.dispatch(FleetRequest(rid=rid, arrival_slice=0))
+    assert [len(w.backlog) for w in cell.workers] == [3, 3]
+
+
+# -- global tier: per-class wait-based admission -----------------------------
+
+
+def test_wait_based_admission_rejects_when_budget_exhausted():
+    cell, router = _one_cell_router()
+    rejected = None
+    for rid in range(1000):
+        req = FleetRequest(rid=rid, arrival_slice=0)
+        if not router.route(req):
+            rejected = req
+            break
+    assert rejected is not None, "default budget never exhausted"
+    assert rejected.admission == ADMIT_REJECT and rejected.rejected
+    # the expected completion latency of one more request really does
+    # exceed the default budget
+    assert cell.expected_latency_slices(1) > router.budget("default")
+
+
+def test_batch_class_admitted_deeper_than_interactive():
+    cell, router = _one_cell_router(budgets={"batch": 8.0,
+                                             "interactive": 2.0})
+    n_interactive = 0
+    while router.route(FleetRequest(rid=n_interactive, arrival_slice=0,
+                                    slo_class="interactive")):
+        n_interactive += 1
+        assert n_interactive < 1000
+    # interactive is exhausted, but the relaxed batch budget still admits
+    batch = FleetRequest(rid=9000, arrival_slice=0, slo_class="batch")
+    assert router.route(batch)
+    assert batch.admission == ADMIT_ACCEPT
+    n_batch = n_interactive
+    while router.route(FleetRequest(rid=10000 + n_batch, arrival_slice=0,
+                                    slo_class="batch")):
+        n_batch += 1
+        assert n_batch < 5000
+    assert n_batch > n_interactive    # 4x the budget -> deeper queue
+
+
+def test_unknown_class_inherits_default_budget():
+    _, router = _one_cell_router(budgets={"batch": 8.0})
+    assert router.budget("nope") == router.budget("default") == 2.0
+    assert router.budget("batch") == 8.0
+
+
+# -- determinism -------------------------------------------------------------
+
+
+def test_two_level_router_deterministic_under_fixed_seed():
+    kw = dict(n_cells=3, engines_per_cell=2, seed=7,
+              class_mix={"interactive": 0.3, "batch": 0.2, "default": 0.5},
+              budgets={"interactive": 2.0, "batch": 8.0})
+    tr = make_trace("mmpp", n_slices=20, seed=3)
+    res_a = api.hierarchical_fleet("tpu-pool", **kw).run(tr)
+    res_b = api.hierarchical_fleet("tpu-pool", **kw).run(tr)
+    assert res_a.assignments == res_b.assignments
+    assert res_a.assignments, "no request was ever admitted"
+    sa, sb = summarize(res_a), summarize(res_b)
+    assert sa == sb
+
+
+# -- autoscaler --------------------------------------------------------------
+
+
+def test_autoscaler_no_flapping_on_step_trace():
+    """A step load (high plateau -> low plateau) must produce one
+    monotone up-phase and one monotone down-phase per cell, never an
+    up/down/up oscillation (hysteresis: watermarks + patience +
+    cooldown)."""
+    tr = replay_trace([40] * 12 + [2] * 20)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=2, engines_per_cell=2,
+                                  autoscale=True, max_engines=6)
+    res = hier.run(tr)
+    assert res.n_scale_ups > 0 and res.n_scale_downs > 0
+    for cid in range(2):
+        dirs = [e.direction for e in res.scale_events if e.cell == cid]
+        flips = sum(a != b for a, b in zip(dirs, dirs[1:]))
+        assert flips <= 1, f"cell {cid} flapped: {dirs}"
+    assert res.n_engines_peak > res.n_engines_start
+    assert res.n_engines_end < res.n_engines_peak
+
+
+def test_autoscaler_respects_engine_bounds():
+    tr = replay_trace([60] * 10)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=2, engines_per_cell=1,
+                                  autoscale=True, max_engines=3)
+    res = hier.run(tr)
+    assert res.n_engines_peak <= 2 * 3
+    for c in hier.cells:
+        assert 1 <= c.n_active <= 3
+
+
+def test_scale_ups_cost_zero_lut_builds_cold_and_warm(tmp_path):
+    pc = api.compiler()
+    tr = replay_trace([50] * 10 + [1] * 12)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=2, engines_per_cell=1,
+                                  autoscale=True, max_engines=4, compiler=pc)
+    res = hier.run(tr)
+    assert res.n_scale_ups > 0
+    assert res.scale_up_builds == 0       # bring-up LUT is warm in-cache
+    assert pc.n_builds == 1               # one shape, built once at bring-up
+    path = tmp_path / "luts.json"
+    pc.save(path)
+    # warm-started process: zero builds end to end, including scale-ups
+    pc2 = api.compiler()
+    assert pc2.load(path) == 1
+    hier2 = api.hierarchical_fleet("tpu-pool", n_cells=2,
+                                   engines_per_cell=1, autoscale=True,
+                                   max_engines=4, compiler=pc2)
+    res2 = hier2.run(tr)
+    assert pc2.n_builds == 0 and pc2.n_loaded == 1
+    assert res2.scale_up_builds == 0
+    # scale-downs park engines; later scale-ups reuse them without builds
+    unparked = [e for e in res.scale_events
+                if e.direction == "up" and e.unparked]
+    for e in unparked:
+        assert e.lut_builds == 0
+
+
+def test_scaled_up_engine_serves_requests():
+    tr = replay_trace([50] * 12)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=1, engines_per_cell=1,
+                                  autoscale=True, max_engines=4)
+    res = hier.run(tr)
+    assert res.n_scale_ups > 0
+    served = {wid for _, _, wid in res.assignments}
+    assert len(served) > 1                # new engines took traffic
+
+
+# -- end-to-end + metrics ----------------------------------------------------
+
+
+def test_hierarchy_run_conserves_requests_and_summarizes():
+    tr = make_trace("mmpp", n_slices=20, seed=0)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=2, engines_per_cell=2,
+                                  class_mix={"interactive": 0.5,
+                                             "default": 0.5},
+                                  budgets={"interactive": 2.0})
+    res = hier.run(tr)
+    r = res.result
+    assert (len(r.completed) + len(r.rejected)
+            + len(r.unfinished) == tr.total)
+    s = summarize(res)                    # HierarchyResult unwraps
+    assert s.n_submitted == tr.total
+    assert s.p50_ms <= s.p95_ms <= s.p99_ms
+    assert s.energy_uj > 0
+    by_class = class_breakdown(res, budgets={"interactive": 2.0})
+    assert set(by_class) == {"interactive", "default"}
+    assert sum(v["n_submitted"] for v in by_class.values()) == tr.total
+    for v in by_class.values():
+        assert 0.0 <= v["deadline_miss_rate"] <= 1.0
+
+
+def test_jsq_cell_policy_end_to_end():
+    tr = replay_trace([12] * 8)
+    hier = api.hierarchical_fleet("tpu-pool", n_cells=2, engines_per_cell=2,
+                                  cell_policy="jsq")
+    s = summarize(hier.run(tr))
+    assert s.n_completed == 96 and s.n_rejected == 0
+
+
+def test_hierarchy_flight_frames_carry_cell_aggregates():
+    obs.reset()
+    rec = obs.FlightRecorder(capacity=16, miss_rate_threshold=2.0)
+    obs.enable(flight_recorder=rec)
+    try:
+        tr = replay_trace([8] * 6)
+        hier = api.hierarchical_fleet("tpu-pool", n_cells=2,
+                                      engines_per_cell=1, autoscale=True,
+                                      max_engines=2)
+        hier.run(tr)
+        assert len(rec) > 0
+        frame = rec.frames[-1]
+        assert {"arrivals", "admitted", "rejected", "cells",
+                "scale_events", "lut_cache", "running"} <= set(frame)
+        cell = frame["cells"][0]
+        assert {"cell", "engines", "parked", "queue_depth",
+                "expected_wait", "capacity_per_engine",
+                "recent_miss_rate"} <= set(cell)
+        json.dumps(frame)                 # frames stay JSON-serializable
+        # the global tier counted admissions under the PR 6 schema
+        reg = obs.metrics()
+        assert reg.value("fleet.admission", decision=ADMIT_ACCEPT,
+                         reason="ok", cls="default") > 0
+    finally:
+        obs.reset()
+
+
+def test_reject_reason_code_counted():
+    obs.reset()
+    obs.enable()
+    try:
+        cell, router = _one_cell_router()
+        for rid in range(200):
+            router.route(FleetRequest(rid=rid, arrival_slice=0))
+        n = obs.metrics().value("fleet.admission", decision=ADMIT_REJECT,
+                                reason=REASON_BUDGET, cls="default")
+        assert n > 0
+    finally:
+        obs.reset()
+
+
+# -- obs histogram additions -------------------------------------------------
+
+
+def test_histogram_quantile_nearest_rank():
+    h = obs.Histogram(obs.WAIT_SLICE_BUCKETS)
+    assert h.quantile(99) is None         # empty
+    for x in (0, 0, 1, 1, 1, 3, 7, 100):
+        h.observe(x)
+    assert h.quantile(50) == 1            # bucket upper bound
+    assert h.quantile(0) == 0
+    assert h.quantile(100) == 100         # overflow -> observed max
+
+
+def test_histogram_merge_folds_same_grid_and_rejects_other():
+    a = obs.Histogram(obs.WAIT_SLICE_BUCKETS)
+    b = obs.Histogram(obs.WAIT_SLICE_BUCKETS)
+    for x in (0, 1, 2):
+        a.observe(x)
+    for x in (4, 8):
+        b.observe(x)
+    out = a.merge(b)
+    assert out is a and a.count == 5
+    assert a.quantile(100) == 8
+    with pytest.raises(ValueError):
+        a.merge(obs.Histogram((0, 1)))

@@ -2,10 +2,10 @@
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import spaces as sp
 from repro.core import workloads
 from repro.core.energy import EnergyModel
-from repro.core.scheduler import TimeSliceScheduler
 from repro.core.system import (default_t_slice_ns, energy_savings_table,
                                run_baseline, run_hh_pim)
 
@@ -16,8 +16,8 @@ RHO = 4.0
 def effnet_sched():
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    return TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                              lut_points=32)
+    return api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                         lut_points=32)
 
 
 def test_scheduler_meets_2T_latency(effnet_sched):
@@ -26,8 +26,8 @@ def test_scheduler_meets_2T_latency(effnet_sched):
     for scen, tasks in workloads.SCENARIOS.items():
         m = sp.EFFICIENTNET_B0
         T = default_t_slice_ns(m, RHO)
-        sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                                   lut_points=32)
+        sched = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                              lut_points=32)
         for rep in sched.run(tasks):
             assert rep.deadline_met, (scen, rep.slice_idx)
             assert rep.t_exec_ns + rep.t_move_ns <= T + 1e-6
@@ -37,8 +37,8 @@ def test_scheduler_adapts_to_load(effnet_sched):
     """Low load => LP/MRAM-heavy placement; high load => SRAM-heavy."""
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                               lut_points=32)
+    sched = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                          lut_points=32)
     hi = sched.step(10)
     lo = sched.step(1)
     hp_frac_hi = (hi.placement.get("hp_sram", 0)
@@ -56,8 +56,8 @@ def test_scheduler_adapts_to_load(effnet_sched):
 def test_scheduler_movement_accounting(effnet_sched):
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                               lut_points=32)
+    sched = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                          lut_points=32)
     sched.step(10)
     rep = sched.step(1)          # placement change => movement
     if rep.moved_weights:
@@ -72,8 +72,8 @@ def test_straggler_feedback_shifts_load():
     mitigation via the placement LUT)."""
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    sched = TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                               lut_points=32)
+    sched = api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                          lut_points=32)
     normal = sched.step(5)
     lp_before = (normal.placement.get("lp_sram", 0)
                  + normal.placement.get("lp_mram", 0))

@@ -3,10 +3,10 @@ slowdown-factor rescaling path."""
 import numpy as np
 import pytest
 
+from repro import api
 from repro.core import spaces as sp
 from repro.core import workloads
 from repro.core.energy import EnergyModel
-from repro.core.scheduler import TimeSliceScheduler
 from repro.core.system import default_t_slice_ns
 
 RHO = 4.0
@@ -74,8 +74,8 @@ def test_case6_random_seeded_and_bounded():
 def _sched():
     m = sp.EFFICIENTNET_B0
     T = default_t_slice_ns(m, RHO)
-    return TimeSliceScheduler(sp.hh_pim(), m, t_slice_ns=T, rho=RHO,
-                              lut_points=24)
+    return api.scheduler("edge-hhpim", m, t_slice_ns=T, rho=RHO,
+                         lut_points=24)
 
 
 def test_observe_slowdown_rejects_speedup():
