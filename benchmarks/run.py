@@ -26,9 +26,10 @@ from benchmarks import paper_tables
 # cheap-enough-for-every-PR subset: the per-space constants table, the
 # three solver cross-checks (edge dp-vs-closed-form, gpu-vs-tpu pools,
 # the 3-pool cxl-tier-3 min-plus combine), the placement-compiler
-# throughput suite and the observability-overhead check
+# throughput suite, the observability-overhead check and the online
+# DVFS controller frontier
 QUICK = ("table5_power", "solver_agreement", "pool_substrates",
-         "multipool", "lut_build", "obs_overhead")
+         "multipool", "lut_build", "obs_overhead", "dvfs_frontier")
 
 # name -> (flag inside the table's derived dict that must be true)
 GATES = {
@@ -37,6 +38,7 @@ GATES = {
     "multipool": "cxl3_solver_agreement_ok",
     "lut_build": "speedup_ok",
     "obs_overhead": "overhead_ok",
+    "dvfs_frontier": "frontier_ok",
 }
 
 

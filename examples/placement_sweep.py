@@ -33,24 +33,60 @@ def sweep(model: sp.ModelSpec, rho: float) -> None:
                   f"E_task {e.e_task_pj*1e-6:9.1f} uJ  {share}")
 
 
-def dvfs_frontier(clocks=(0.3, 0.45, 0.6, 0.8, 1.0),
-                  tokens_per_task: int = 2) -> None:
-    """Energy-vs-latency frontier of the gpu-pool substrate over its DVFS
-    knob: per LP-pool frequency scale, the peak (min-latency) point and
-    the relaxed-deadline (min-energy) LUT entry."""
-    print("== gpu-pool DVFS frontier (LP-pool frequency scale lp_clock) ==")
-    for clock in clocks:
-        sub = api.substrate("gpu-pool", lp_clock=clock,
-                            tokens_per_task=tokens_per_task)
-        model = sub.model_spec()
-        T = sub.default_t_slice_ns(model)
-        lut = sub.build_lut(model, t_slice_ns=T, n_points=24)
+def dvfs_frontier(n_clocks: int = 5, tokens_per_task: int = 2) -> None:
+    """2-D (clock x placement) energy-latency frontier of the gpu-pool
+    substrate (DESIGN.md SS.10).
+
+    Axis 1 is the DVFS clock grid of the substrate's TechModel (the same
+    grid the online controller solves over); axis 2 is the placement LUT
+    at each grid point, batch-built through one PlacementCompiler pass.
+    The per-clock rows show the 1-D frontier a static ``lp_clock`` pin
+    reaches; the solved frontier below them is what the controller picks
+    per latency budget - the lower envelope over both axes, with the
+    chosen clock printed wherever the winning (clock, placement) pair
+    changes."""
+    sub = api.substrate("gpu-pool", tokens_per_task=tokens_per_task)
+    tm = sub.tech_model()
+    grid = tm.clock_grid(n_clocks, include=(sub.lp_clock,))
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    pc = api.compiler()
+    luts = pc.compile_clock_grid(sub, clocks=grid, t_slice_ns=T,
+                                 n_points=24)
+    print(f"== gpu-pool 2-D DVFS frontier: {len(grid)}-point TechModel "
+          f"grid [{tm.dvfs_min:.2f}, {tm.dvfs_max:.2f}] x placement ==")
+    for clock, lut in luts.items():
         feasible = [e for e in lut.entries if e.feasible]
         peak, relaxed = feasible[0], feasible[-1]
         print(f"   lp_clock {clock:4.2f}  t_peak {peak.t_task_ns:8.2f} ns  "
               f"E_peak {peak.e_task_pj:10.1f} pJ  "
-              f"E_relaxed {relaxed.e_task_pj:10.1f} pJ  "
-              f"T {T/1e3:7.2f} us")
+              f"E_relaxed {relaxed.e_task_pj:10.1f} pJ")
+    print("   -- solved (placement, clock) per latency budget "
+          "(the online controller's lower envelope) --")
+    t_lo = min(e.t_task_ns for lut in luts.values()
+               for e in lut.entries if e.feasible)
+    seen = None
+    for i in range(25):
+        budget = t_lo + (T - t_lo) * i / 24
+        best = None
+        for clock, lut in luts.items():
+            e = lut.lookup(budget)
+            if not e.feasible or e.t_task_ns > budget:
+                continue
+            if best is None or e.e_task_pj < best[1].e_task_pj:
+                best = (clock, e)
+        if best is None:
+            continue
+        clock, e = best
+        key = (clock,
+               tuple(sorted(k for k, v in e.placement.items() if v)))
+        if key == seen:
+            continue
+        seen = key
+        share = {k: f"{100 * v / model.n_params:.0f}%"
+                 for k, v in e.placement.items() if v}
+        print(f"   t <= {budget:8.2f} ns  clk {clock:4.2f}  "
+              f"E_task {e.e_task_pj:10.1f} pJ  {share}")
 
 
 def main() -> None:

@@ -43,14 +43,25 @@ from repro.core.solvers import (SOLVERS, FixedPolicySolver,  # noqa: F401
 from repro.core.substrate import (SUBSTRATES, Substrate,  # noqa: F401
                                   available_substrates, list_substrates,
                                   make_substrate, register_substrate)
+from repro.core.techmodel import (TECH_MODELS, DVFSController,  # noqa: F401
+                                  TechModel, available_tech_models,
+                                  get_tech_model, register_tech_model)
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
     "hierarchical_fleet", "compiler", "obs", "PlacementCompiler",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
-    "list_substrates",
+    "list_substrates", "TechModel", "DVFSController", "TECH_MODELS",
+    "tech_model", "register_tech_model", "available_tech_models",
 ]
+
+
+def tech_model(name: str) -> TechModel:
+    """Resolve a registered :class:`~repro.core.techmodel.TechModel`
+    (the per-tech-node vdd/freq/power curve + DVFS bounds behind a
+    substrate's clock axis, DESIGN.md SS.10)."""
+    return get_tech_model(name)
 
 
 def compiler() -> PlacementCompiler:
@@ -97,7 +108,8 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
               t_slice_ns: Optional[float] = None,
               rho: Optional[float] = None, lut=None,
               lut_points: Optional[int] = None, initial_placement=None,
-              compiler: Optional[PlacementCompiler] = None, **over):
+              compiler: Optional[PlacementCompiler] = None,
+              dvfs=None, **over):
     """Construct the per-slice runtime for a substrate workload.
 
     Dynamic solvers (``closed-form``/``dp``) yield a
@@ -106,6 +118,12 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
     :class:`~repro.core.scheduler.FixedPlacementScheduler` (the Table I
     comparison-group semantics: no migration, no movement accounting).
     A shared ``compiler`` lets several schedulers reuse one LUT cache.
+
+    ``dvfs`` attaches the online per-slice DVFS controller (DESIGN.md
+    SS.10) on substrates with a registered TechModel: ``True`` for the
+    default clock grid, an int for the grid size, a sequence for
+    explicit clock points, or a prebuilt
+    :class:`~repro.core.techmodel.DVFSController`.
     """
     s = substrate(sub, **over)
     model = s.model_spec(workload)
@@ -114,6 +132,10 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
         t_slice_ns = s.default_t_slice_ns(model, rho=rho)
     sol = make_solver(solver or s.solver)
     if sol.fixed:
+        if dvfs is not None:
+            raise ValueError(
+                "the DVFS controller needs a dynamic solver; fixed-* "
+                "policies run at the substrate's static operating point")
         em = s.energy_model(model, rho=rho)
         return FixedPlacementScheduler(
             s.arch, model, t_slice_ns=t_slice_ns,
@@ -121,7 +143,7 @@ def scheduler(sub: Union[str, Substrate], workload=None, *, solver=None,
     return TimeSliceScheduler.from_substrate(
         s, model, t_slice_ns=t_slice_ns, rho=rho, solver=sol, lut=lut,
         initial_placement=initial_placement, lut_points=lut_points,
-        compiler=compiler)
+        compiler=compiler, dvfs=dvfs)
 
 
 def engine(sub: Union[str, Substrate] = "tpu-pool", cfg=None, params=None,
@@ -153,7 +175,7 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
           forecast_margin: float = 1.0, params=None, decode: bool = False,
           max_batch: int = 16, forecaster_kw: Optional[dict] = None,
           workload=None, compiler: Optional[PlacementCompiler] = None,
-          **over):
+          dvfs=None, **over):
     """Construct a fleet of ``n_engines`` serve engines on one substrate.
 
     Engine shapes come from ``substrate.engine_variant(i)`` (the
@@ -165,6 +187,14 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
     substrates, requires ``params``) attaches a real
     ``HeteroServeEngine`` per worker so every placement change re-tiers
     actual weights and decodes tokens through them.
+
+    ``dvfs`` turns the fleet's clock into a solved variable (DESIGN.md
+    SS.10): ``True``/int/sequence builds one
+    :class:`~repro.core.techmodel.DVFSController` per engine *shape*
+    (grid LUTs batch-built through the shared compiler at bring-up,
+    deduped exactly like the base LUTs), shared by every worker of that
+    shape; each worker's scheduler then solves the energy-minimal
+    (placement, clock) pair per slice.
     """
     from repro.fleet.forecast import make_forecaster
     from repro.fleet.router import EngineWorker, Fleet
@@ -201,6 +231,26 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
     luts = pc.compile(shapes.values(), model, t_slice_ns=t_slice_ns,
                       n_points=lut_points, rho=rho)
 
+    # one DVFS controller per engine SHAPE (controllers are stateless
+    # across slices, so same-shape workers share one grid of LUTs)
+    controllers = {}
+    if dvfs is not None and dvfs is not False:
+        from repro.core.techmodel import DVFSController
+        kw = {}
+        if isinstance(dvfs, DVFSController):
+            raise ValueError(
+                "pass dvfs=True/int/sequence to fleet(); controllers are "
+                "per engine shape and built internally")
+        if isinstance(dvfs, int) and not isinstance(dvfs, bool):
+            kw["n_clocks"] = dvfs
+        elif not isinstance(dvfs, bool):
+            kw["clocks"] = tuple(dvfs)
+        for vk, v in shapes.items():
+            controllers[vk] = DVFSController(
+                v, model, t_slice_ns=t_slice_ns, rho=rho,
+                lut_points=lut_points, compiler=pc, **kw)
+            controllers[vk].prepare()
+
     workers = []
     for i, v in enumerate(variants):
         hetero = None
@@ -218,6 +268,8 @@ def fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
                 v, model, t_slice_ns=t_slice_ns, rho=rho,
                 lut=luts[v.variant_key()], lut_points=lut_points,
                 compiler=pc)
+        if controllers:
+            sched.dvfs = controllers[v.variant_key()]
         workers.append(EngineWorker(
             i, sched, make_forecaster(forecaster, **(forecaster_kw or {})),
             hetero=hetero, substrate=v, forecast_margin=forecast_margin))

@@ -138,6 +138,46 @@ class PlacementCompiler:
                 static_window=sub.static_window, variant_key=vk)
         return out
 
+    def compile_clock_grid(self, sub, workload=None, *,
+                           clocks: Optional[Iterable[float]] = None,
+                           n_clocks: int = 5, solver=None,
+                           t_slice_ns: Optional[float] = None,
+                           n_points: Optional[int] = None,
+                           rho: Optional[float] = None
+                           ) -> Dict[float, PlacementLUT]:
+        """Batch-build one LUT per DVFS clock point of ``sub``'s
+        TechModel grid (DESIGN.md SS.10). Returns ``{clock: lut}``.
+
+        Each grid point is ``sub.with_clock(c)`` - a distinct
+        ``variant_key()`` - so points dedupe fleet-wide exactly like
+        engine shapes: N controllers on the same grid pay one build per
+        point. ``clocks=None`` takes ``n_clocks`` evenly spaced points
+        over the TechModel's DVFS bounds plus the substrate's default
+        clock (the legacy static operating point stays on the grid)."""
+        tm = sub.tech_model()
+        if tm is None:
+            raise ValueError(
+                f"substrate {sub.name!r} has no registered TechModel; "
+                f"no clock grid to compile")
+        if clocks is None:
+            default = getattr(sub, "lp_clock", None)
+            include = () if default is None else (default,)
+            clocks = tm.clock_grid(n_clocks, include=include)
+        model = sub.model_spec(workload)
+        r = sub.rho if rho is None else rho
+        if t_slice_ns is None:
+            t_slice_ns = sub.default_t_slice_ns(model, rho=r)
+        out: Dict[float, PlacementLUT] = {}
+        for c in clocks:
+            v = sub.with_clock(c)
+            em = EnergyModel(v.arch, model, rho=r)
+            out[c] = self.lut(
+                em, solver=solver or v.solver, t_slice_ns=t_slice_ns,
+                n_points=(v.lut_points if n_points is None else n_points),
+                static_window=v.static_window,
+                variant_key=v.variant_key())
+        return out
+
     # -- warm start ---------------------------------------------------------
     # Fleet restarts shouldn't pay bring-up compiles again: save() the
     # cache next to the checkpoints, load() it into the next process'

@@ -38,6 +38,9 @@ class SliceReport:
     # tasks actually run this slice; < n_tasks only under capacity capping
     # (fleet serving), where the remainder carries over to the next slice.
     n_executed: Optional[int] = None
+    # DVFS clock the online controller chose for this slice; None when
+    # the scheduler runs at a static operating point (no controller).
+    clock: Optional[float] = None
 
     @property
     def n_done(self) -> int:
@@ -70,13 +73,22 @@ class TimeSliceScheduler:
                        lut: Optional[PlacementLUT] = None,
                        initial_placement: Optional[Placement] = None,
                        lut_points: Optional[int] = None,
-                       compiler=None) -> "TimeSliceScheduler":
+                       compiler=None, dvfs=None) -> "TimeSliceScheduler":
         """Canonical constructor: resolve everything from a
         :class:`~repro.core.substrate.Substrate` (duck-typed), letting
         callers override slice length, reuse factor, solver and LUT.
         A shared :class:`~repro.core.compiler.PlacementCompiler` makes
         LUT (re)builds - including straggler-rescaling rebuilds - hit a
-        fleet-wide cache instead of this engine's private one."""
+        fleet-wide cache instead of this engine's private one.
+
+        ``dvfs`` attaches the online DVFS controller (DESIGN.md SS.10):
+        ``True`` solves over the substrate TechModel's default clock
+        grid, an int sets the grid size, a sequence gives explicit clock
+        points, and a prebuilt
+        :class:`~repro.core.techmodel.DVFSController` is shared as-is
+        (fleet workers of one shape share one controller). Each slice
+        then picks the energy-minimal (placement, clock) pair instead of
+        running at the substrate's static ``lp_clock``."""
         model = substrate.model_spec(workload)
         rho = substrate.rho if rho is None else rho
         if t_slice_ns is None:
@@ -92,6 +104,22 @@ class TimeSliceScheduler:
                                           "t_constraint"),
                     compiler=compiler,
                     variant_key=substrate.variant_key())
+        if dvfs is not None and dvfs is not False:
+            from repro.core.techmodel import DVFSController
+            if isinstance(dvfs, DVFSController):
+                ctrl = dvfs
+            else:
+                kw = {}
+                if isinstance(dvfs, int) and not isinstance(dvfs, bool):
+                    kw["n_clocks"] = dvfs
+                elif not isinstance(dvfs, bool):
+                    kw["clocks"] = tuple(dvfs)
+                ctrl = DVFSController(
+                    substrate, model, t_slice_ns=self.t_slice_ns, rho=rho,
+                    solver=sol, lut_points=self.lut_points,
+                    compiler=compiler, **kw)
+                ctrl.prepare()
+            self.dvfs = ctrl
         return self
 
     def _setup(self, arch: sp.PIMArch, model: sp.ModelSpec, *,
@@ -112,6 +140,10 @@ class TimeSliceScheduler:
         self.variant_key = variant_key or (arch.name,)
         self.solver = solver if solver is not None \
             else make_solver("closed-form")
+        # online DVFS controller (repro.core.techmodel); None = static
+        # operating point. Attached by from_substrate(dvfs=...) or by
+        # api.fleet, which shares one controller per engine shape.
+        self.dvfs = None
         self.em = EnergyModel(arch, model, rho=rho)
         # slowdown must exist before the cache prime: the lut property
         # looks the cache up under the populated slowdown signature.
@@ -190,26 +222,35 @@ class TimeSliceScheduler:
         _t0 = obs.now_ns() if _obs else 0
         T = self.t_slice_ns
         n_plan = max(lookup_tasks if lookup_tasks is not None else n_tasks, 1)
-        lut = self.lut
+        clock = None
+        if self.dvfs is not None:
+            # online DVFS: the controller picks the energy-minimal
+            # (placement, clock) grid point for this slice's plan; the
+            # slice then runs entirely under that point's physics.
+            clock, em, lut, _ = self.dvfs.select(n_plan,
+                                                 slowdown=self.slowdown)
+        else:
+            em = self.em
+            lut = self.lut
 
         # pass 1: ignore movement; pass 2: subtract its overhead (paper:
         # "the calculation of t_constraint at runtime incorporates the data
         # movement overhead").
         entry = lut.lookup(T / n_plan)
-        t_move_c, e_move = self.em.movement_cost(self.placement,
-                                                 entry.placement)
+        t_move_c, e_move = em.movement_cost(self.placement,
+                                            entry.placement)
         t_move = max(t_move_c.values(), default=0.0)
         if t_move > 0:
             entry2 = lut.lookup(max(T - t_move, 0.0) / n_plan)
-            t_move_c2, e_move2 = self.em.movement_cost(self.placement,
-                                                       entry2.placement)
+            t_move_c2, e_move2 = em.movement_cost(self.placement,
+                                                  entry2.placement)
             t_move2 = max(t_move_c2.values(), default=0.0)
             if n_plan * entry2.t_task_ns + t_move2 <= T + 1e-9:
                 entry, t_move, e_move = entry2, t_move2, e_move2
             # if even the refined choice cannot absorb the migration this
             # slice, keep the current placement when it meets the deadline
             # on its own ("no inference delay due to data movement").
-            elif (n_plan * self.em.task_cost(self.placement).t_task_ns
+            elif (n_plan * em.task_cost(self.placement).t_task_ns
                   <= T + 1e-9):
                 entry = None
 
@@ -221,7 +262,7 @@ class TimeSliceScheduler:
         moved = sum(max(0, new_placement.get(k, 0) - self.placement.get(k, 0))
                     for k in {*new_placement, *self.placement})
 
-        cost = self.em.task_cost(new_placement)
+        cost = em.task_cost(new_placement)
         n_run = n_tasks
         if cap_to_capacity and cost.t_task_ns > 0:
             capacity = int((T - t_move + 1e-6) // cost.t_task_ns)
@@ -229,7 +270,7 @@ class TimeSliceScheduler:
         t_exec = n_run * cost.t_task_ns
         busy = {c: t * n_run for c, t in cost.t_cluster_ns.items()}
         e_dyn = n_run * cost.e_dyn_task_pj
-        e_static = self.em.static_energy_pj(new_placement, T, busy)
+        e_static = em.static_energy_pj(new_placement, T, busy)
         deadline_met = (n_tasks * cost.t_task_ns + t_move) <= T + 1e-6
 
         # t_constraint reflects the load the LUT was actually consulted
@@ -237,10 +278,13 @@ class TimeSliceScheduler:
         # recorded placement
         rep = SliceReport(self._idx, n_tasks, T / n_plan,
                           new_placement, moved, t_move, e_move, t_exec,
-                          e_dyn, e_static, deadline_met, n_executed=n_run)
+                          e_dyn, e_static, deadline_met, n_executed=n_run,
+                          clock=clock)
         self.placement = new_placement
         self._idx += 1
         if _obs:
+            if clock is not None:
+                obs.gauge("sched.dvfs.clock", clock)
             # the slice span carries the full SliceReport so a Perfetto
             # timeline attributes every missed deadline to its placement
             obs.complete("sched.slice", _t0, cat="scheduler", args={
@@ -250,7 +294,7 @@ class TimeSliceScheduler:
                 "t_move_ns": t_move, "t_exec_ns": t_exec,
                 "moved_weights": moved, "e_dyn_pj": e_dyn,
                 "e_static_pj": e_static, "e_move_pj": e_move,
-                "deadline_met": deadline_met,
+                "deadline_met": deadline_met, "clock": clock,
                 "placement": dict(new_placement)})
             if moved:
                 obs.instant("sched.migration", cat="scheduler",

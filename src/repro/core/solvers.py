@@ -17,6 +17,13 @@ re-threading ``(arch, model, em, ...)`` tuples:
     benchmarked through the same builder as the real solvers.
 
 Adding a solver is one :func:`register_solver` call; see DESIGN.md SS.5.
+
+The DVFS clock axis (DESIGN.md SS.10) is orthogonal to the solver
+registry: the online controller (:mod:`repro.core.techmodel`) builds one
+LUT per clock grid point *through* whichever dynamic solver the
+substrate names, then picks among the per-point LUTs at runtime -- so a
+new solver composes with the clock axis for free, and a new TechModel
+never touches solver code.
 """
 from __future__ import annotations
 

@@ -59,6 +59,33 @@ class Substrate:
     # "t_constraint" (paper's per-task accounting) or "t_slice" (serving
     # pools with a pinned slice length - see GPUPoolSubstrate)
     static_window = "t_constraint"
+    # registered TechModel name (repro.core.techmodel) where the
+    # substrate has a DVFS axis; None = fixed-voltage platform (the
+    # edge archs' HP/LP split is baked into Table I constants)
+    tech: Optional[str] = None
+
+    # -- technology / DVFS axis (DESIGN.md SS.10) --------------------------
+    def tech_model(self):
+        """The registered :class:`~repro.core.techmodel.TechModel`
+        behind this substrate's DVFS axis, or None on fixed-voltage
+        platforms."""
+        if self.tech is None:
+            return None
+        from repro.core.techmodel import get_tech_model
+        return get_tech_model(self.tech)
+
+    def with_clock(self, clock: float) -> "Substrate":
+        """This substrate re-pointed to DVFS scale ``clock`` (clamped
+        into the TechModel's operating bounds). The clocked variant has
+        a distinct ``variant_key()``, so grid points never collide in a
+        shared compiler cache."""
+        tm = self.tech_model()
+        if tm is None or not hasattr(self, "lp_clock"):
+            raise ValueError(
+                f"substrate {self.name!r} has no DVFS axis (tech="
+                f"{self.tech!r}); register a TechModel and an lp_clock "
+                f"field to make the clock a solved variable")
+        return dataclasses.replace(self, lp_clock=tm.clamp(clock))
 
     # -- workload mapping --------------------------------------------------
     def model_spec(self, workload=None, **hint) -> sp.ModelSpec:
@@ -302,6 +329,7 @@ class GPUPoolSubstrate(ServePoolSubstrate):
     dp/closed-form agreement check relies on."""
 
     static_window = "t_slice"
+    tech = "sm-pool-7nm"         # repro.serve.gpu.TECH
 
     name: str = "gpu-pool"
     n_hp_clusters: int = 8
@@ -342,6 +370,7 @@ class CXLTierSubstrate(ServePoolSubstrate):
     TPU/GPU pools (what moves is the column split, not the format)."""
 
     static_window = "t_slice"    # pinned-slice pools: see GPUPoolSubstrate
+    tech = "cxl-node-10nm"       # repro.serve.cxl.TECH
 
     name: str = "cxl-tier"
     n_hp_nodes: int = 4
@@ -397,6 +426,7 @@ class CXLTier3Substrate(ServePoolSubstrate):
     changes re-tier real weight columns."""
 
     static_window = "t_slice"    # pinned-slice pools: see GPUPoolSubstrate
+    tech = "cxl-node-10nm"       # far pool rides the CXL node curve
 
     name: str = "cxl-tier-3"
     n_hbm_nodes: int = 2

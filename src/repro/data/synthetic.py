@@ -7,7 +7,7 @@ and each data shard draws only its slice (no host reads the global batch).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

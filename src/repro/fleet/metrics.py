@@ -84,7 +84,7 @@ def class_breakdown(res: FleetResult,
                   else res.slo_ns)
         lat = g["lat"]
         n = len(lat) + g["rej"] + g["unf"]
-        misses = sum(l > slo_ns for l in lat) + g["rej"] + g["unf"]
+        misses = sum(t > slo_ns for t in lat) + g["rej"] + g["unf"]
         out[cls] = {
             "n_submitted": n,
             "n_completed": len(lat),
@@ -92,7 +92,7 @@ def class_breakdown(res: FleetResult,
             "n_unfinished": g["unf"],
             "slo_ms": slo_ns / 1e6,
             "deadline_miss_rate": misses / n if n else 0.0,
-            "p99_ms": (percentile([l / 1e6 for l in lat], 99)
+            "p99_ms": (percentile([t / 1e6 for t in lat], 99)
                        if lat else 0.0),
         }
     return out
@@ -106,7 +106,7 @@ def summarize(res: FleetResult) -> FleetSummary:
     n_sub = (len(res.completed) + len(res.rejected)
              + len(res.unfinished))
     # rejected and never-finished requests both count against the SLO
-    misses = (sum(l > slo_ms for l in lat_ms) + len(res.rejected)
+    misses = (sum(t > slo_ms for t in lat_ms) + len(res.rejected)
               + len(res.unfinished))
     all_reports = [r for reps in res.reports.values() for r in reps]
     energy_pj = sum(r.energy_pj for r in all_reports)

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 from repro import obs
 from repro.core.scheduler import SliceReport, TimeSliceScheduler

@@ -17,9 +17,7 @@ Usage:
       --mesh single,multi --out experiments/dryrun
 """
 import argparse
-import dataclasses
 import json
-import re
 import time
 import traceback
 from pathlib import Path

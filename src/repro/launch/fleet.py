@@ -5,7 +5,8 @@ Runs a trace-driven multi-engine serving fleet: N HH-PIM serve engines
 weight migration, SLO-aware routing with optional admission control.
 
     python -m repro.launch.fleet --workload mmpp --engines 2 --requests 32
-    python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...
+    python -m repro.launch.fleet --substrate gpu-pool --dvfs-controller ...
+    python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...  # static
     python -m repro.launch.fleet --substrate cxl-tier-3 \\
         --lut-cache ckpt/luts.json ...                    # warm-start
     python -m repro.launch.fleet --trace --flight-recorder ...  # DESIGN SS.8
@@ -98,8 +99,18 @@ def main(argv=None) -> None:
     ap.add_argument("--mixed", action="store_true",
                     help="heterogeneous pool: odd engines get half chips")
     ap.add_argument("--dvfs", type=float, default=None, metavar="SCALE",
-                    help="LP/far-pool DVFS frequency scale in (0, 1] "
-                         "(gpu-pool and cxl-tier substrates)")
+                    help="[deprecated - use --dvfs-controller] pin the "
+                         "LP/far-pool DVFS frequency scale in (0, 1] "
+                         "(gpu-pool and cxl-tier substrates); kept one "
+                         "release as the controller's single-point alias")
+    ap.add_argument("--dvfs-controller", type=int, nargs="?", const=5,
+                    default=None, metavar="N",
+                    help="solve the DVFS clock online: pick the energy-"
+                         "minimal (placement, clock) pair per slice over "
+                         "an N-point TechModel grid (default 5; gpu-pool "
+                         "and cxl-tier substrates, flat fleet path). The "
+                         "chosen clock prints per slice (clk column) and "
+                         "in the dvfs-controller: summary")
     ap.add_argument("--tokens-per-task", type=int, default=2)
     ap.add_argument("--arch", default="internlm2_1_8b")
     ap.add_argument("--seed", type=int, default=0)
@@ -149,6 +160,18 @@ def main(argv=None) -> None:
                              f"of the gpu-pool and cxl-tier substrates; it "
                              f"does not apply to --substrate {substrate}")
         over["lp_clock"] = args.dvfs
+        print("note: --dvfs SCALE is deprecated and will be removed next "
+              "release; it pins the clock the online controller solves. "
+              "Use --dvfs-controller to solve it per slice.")
+    if args.dvfs_controller is not None:
+        if args.cells is not None:
+            raise SystemExit("--dvfs-controller runs on the flat fleet "
+                             "path; drop --cells")
+        if api.substrate(substrate, **over).tech_model() is None:
+            raise SystemExit(
+                f"--dvfs-controller needs a substrate with a registered "
+                f"TechModel (gpu-pool / cxl-tier families); "
+                f"{substrate} has none")
     if args.decode and args.cells is not None:
         if not args.quiet:
             print("hierarchical fleets run the analytic path only; "
@@ -217,14 +240,19 @@ def main(argv=None) -> None:
             tokens_per_task=args.tokens_per_task,
             admission_limit=args.admission_limit,
             forecast_margin=args.margin, params=params,
-            decode=args.decode, compiler=pc, **over)
+            decode=args.decode, compiler=pc,
+            dvfs=args.dvfs_controller, **over)
 
         T_us = fleet.workers[0].t_slice_ns / 1e3
+        dvfs_on = args.dvfs_controller is not None
+        grid = fleet.workers[0].sched.dvfs.clocks if dvfs_on else ()
         print(f"fleet: {args.engines} engines on {substrate}"
               f", policy={args.policy}, forecaster={args.forecaster}, "
               f"t_slice={T_us:.2f} us, trace={trace.name} "
               f"({trace.total} requests / {len(trace)} slices, "
-              f"peak {trace.peak}/slice)")
+              f"peak {trace.peak}/slice)"
+              + (f", dvfs-grid=[{'/'.join(f'{c:.2f}' for c in grid)}]"
+                 if dvfs_on else ""))
 
         def cb(s, n_arr, done, workers):
             if args.quiet:
@@ -233,11 +261,26 @@ def main(argv=None) -> None:
             mig = "/".join(
                 "y" if (w.reports and w.reports[-1].moved_weights) else "."
                 for w in workers)
-            print(f"  slice {s:3d} arrivals {n_arr:3d} done {len(done):3d} "
-                  f"backlog {bl:12s} migrated {mig}")
+            line = (f"  slice {s:3d} arrivals {n_arr:3d} done "
+                    f"{len(done):3d} backlog {bl:12s} migrated {mig}")
+            if dvfs_on:
+                # per-slice solved clock, one column per engine
+                clk = "/".join(
+                    f"{w.reports[-1].clock:.2f}"
+                    if w.reports and w.reports[-1].clock is not None
+                    else "-" for w in workers)
+                line += f" clk {clk}"
+            print(line)
 
         res = fleet.run(trace, verbose_cb=cb)
         s = summarize(res)
+        if dvfs_on:
+            clocks = sorted(r.clock for w in fleet.workers
+                            for r in w.reports if r.clock is not None)
+            mean = sum(clocks) / len(clocks) if clocks else float("nan")
+            print(f"dvfs-controller: {len(grid)}-point grid, solved clock "
+                  f"min {clocks[0]:.2f} / mean {mean:.2f} / max "
+                  f"{clocks[-1]:.2f} over {len(clocks)} engine-slices")
     print(f"completed {s.n_completed}/{s.n_submitted} "
           f"(rejected {s.n_rejected}) over {s.n_slices} slices")
     print(f"latency   p50 {s.p50_ms * 1e3:.2f} us | "

@@ -11,7 +11,7 @@ graph, so a collective inside the layer scan counts n_layers times.
 from __future__ import annotations
 
 import re
-from typing import Dict, Iterable, Tuple
+from typing import Dict
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,

@@ -11,7 +11,6 @@ from __future__ import annotations
 import argparse
 import signal
 
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, canonical, get_config, get_smoke_config
 from repro.data.synthetic import DataConfig

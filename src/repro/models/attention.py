@@ -116,7 +116,7 @@ def _chunked_causal_sdpa(q, k, v, cfg: ModelConfig, q_chunk: int,
         # classic flash-attention backward.
         @jax.checkpoint
         def k_step(carry, kj_idx):
-            m, l, acc = carry
+            m, denom, acc = carry
             kj, vj, jk = kj_idx
             s = jnp.einsum("bkgqh,bksh->bkgqs", qi.astype(jnp.float32),
                            kj.astype(jnp.float32)) * scale
@@ -127,18 +127,18 @@ def _chunked_causal_sdpa(q, k, v, cfg: ModelConfig, q_chunk: int,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p_ = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l_new = l * corr + p_.sum(axis=-1)
+            denom_new = denom * corr + p_.sum(axis=-1)
             acc_new = (acc * corr[..., None]
                        + jnp.einsum("bkgqs,bksh->bkgqh", p_,
                                     vj.astype(jnp.float32)))
-            return (m_new, l_new, acc_new), None
+            return (m_new, denom_new, acc_new), None
 
         init = (jnp.full((B, KV, g, c), -1e30, jnp.float32),
                 jnp.zeros((B, KV, g, c), jnp.float32),
                 jnp.zeros((B, KV, g, c, hd), jnp.float32))
-        (m, l, acc), _ = jax.lax.scan(
+        (m, denom, acc), _ = jax.lax.scan(
             k_step, init, (kc, vc, jnp.arange(n)))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(denom, 1e-30)[..., None]
         return None, out
 
     _, outs = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))

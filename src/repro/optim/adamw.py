@@ -6,7 +6,7 @@ FSDP-sharded params give ZeRO-sharded optimizer states for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -96,7 +96,8 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
 
             out = jax.tree.map(upd, params, grads, state["master"],
                                state["m"], state["v"])
-            is_t = lambda t: isinstance(t, tuple)
+            def is_t(t):
+                return isinstance(t, tuple)
             new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_t)
             new_w = jax.tree.map(lambda t: t[1], out, is_leaf=is_t)
             new_m = jax.tree.map(lambda t: t[2], out, is_leaf=is_t)
@@ -186,7 +187,8 @@ def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
                 return new_p.astype(p.dtype), vr_n, vc_n
 
             out = jax.tree.map(upd, params, grads, state["vr"], state["vc"])
-            is_pair = lambda t: isinstance(t, tuple)
+            def is_pair(t):
+                return isinstance(t, tuple)
             new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is_pair)
             new_vr = jax.tree.map(lambda t: t[1], out, is_leaf=is_pair)
             new_vc = jax.tree.map(lambda t: t[2], out, is_leaf=is_pair)

@@ -49,7 +49,8 @@ def compress_with_feedback(grads: PyTree, error: PyTree
         return deq.astype(g.dtype), corrected - deq
 
     pairs = jax.tree.map(one, grads, error)
-    is_pair = lambda t: isinstance(t, tuple)
+    def is_pair(t):
+        return isinstance(t, tuple)
     out_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
     out_e = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
     return out_g, out_e

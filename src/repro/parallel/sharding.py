@@ -13,7 +13,7 @@ meshes.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

@@ -8,8 +8,8 @@ instantiates exactly that tier pair for the placement engine:
 
 - **Clusters**: an HP pool of performance nodes at full clock and an LP
   pool of efficiency nodes at ``lp_clock`` of it (voltage tracking
-  frequency, the same DVFS model as the GPU pools - energy scales as
-  :func:`repro.serve.gpu.dvfs_energy_scale`).
+  frequency, the same DVFS voltage curve as the GPU pools, owned by
+  the registered :data:`TECH` model - see :mod:`repro.core.techmodel`).
 - **Memory kinds as residency tiers**: node-local DDR residency is the
   "SRAM" tier (the node's DRAM channels stay active while holding
   weights: refresh + PHY, i.e. volatile), CXL-attached residency is the
@@ -39,7 +39,20 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import spaces as sp
-from repro.serve.gpu import dvfs_energy_scale
+from repro.core.techmodel import CXL_NODE_10NM
+
+#: registered per-tech-node physics of the CXL node pools (DESIGN.md
+#: SS.10). The voltage curve matches the GPU pools' (this module
+#: historically imported ``repro.serve.gpu.dvfs_energy_scale``), so
+#: existing LUTs are byte-identical; only the DVFS operating bounds
+#: differ (node fabrics hold a higher frequency floor).
+TECH = CXL_NODE_10NM
+
+
+def dvfs_energy_scale(clock: float) -> float:
+    """Dynamic-energy scale at frequency scale ``clock`` - the
+    registered :data:`TECH` model's ``V^2`` curve."""
+    return TECH.energy_scale(clock)
 
 # -- per-node constants (documented estimates) ------------------------------
 PEAK_FLOPS = 4e12            # INT8 MAC throughput of one node's engine

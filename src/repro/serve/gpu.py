@@ -33,6 +33,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core import spaces as sp
+from repro.core.techmodel import SM_POOL_7NM
 
 # -- A100-class constants (per SM cluster of 16 SMs; estimates, documented)
 SMS_PER_CLUSTER = 16
@@ -52,7 +53,12 @@ SLEEP_W = 0.5                # retention sleep (fp8/int8-resident pool)
 HBM_GB_PER_CLUSTER = 8       # capacity slice per SM cluster
 
 LP_CLOCK = 0.45              # default DVFS point of the low-power pool
-V_MIN_FRAC = 0.45            # rail voltage floor as a fraction of nominal
+
+#: registered per-tech-node physics of this pool family (DESIGN.md SS.10)
+TECH = SM_POOL_7NM
+#: rail voltage floor as a fraction of nominal - now owned by the
+#: TechModel; kept as a module constant for compatibility
+V_MIN_FRAC = TECH.v_min_frac
 
 
 def dvfs_energy_scale(clock: float) -> float:
@@ -62,11 +68,11 @@ def dvfs_energy_scale(clock: float) -> float:
     (``V = V_MIN_FRAC + (1 - V_MIN_FRAC) * clock`` of nominal) and
     switching energy goes as ``V^2`` - the standard DVFS model, and the
     same shape the paper's 1.2 V / 0.8 V HP/LP split instantiates.
+    Delegates to the registered :data:`TECH` model
+    (:mod:`repro.core.techmodel`), whose arithmetic is byte-identical
+    to the historic inline expression.
     """
-    if not 0.0 < clock <= 1.0:
-        raise ValueError(f"DVFS clock scale must be in (0, 1], got {clock}")
-    v = V_MIN_FRAC + (1.0 - V_MIN_FRAC) * clock
-    return v * v
+    return TECH.energy_scale(clock)
 
 
 def _mem(kind: str, clock: float, energy: float) -> sp.MemorySpec:

@@ -61,10 +61,10 @@ def make_train_step(cfg: ModelConfig, opt: Optimizer,
 
             def body(carry, mb):
                 gacc, lacc = carry
-                (l, _m), g = grad_fn(params, mb)
+                (loss_mb, _m), g = grad_fn(params, mb)
                 gacc = jax.tree.map(
                     lambda a, b: a + b.astype(a.dtype), gacc, g)
-                return (gacc, lacc + l), None
+                return (gacc, lacc + loss_mb), None
 
             zeros = jax.tree.map(
                 lambda p: jnp.zeros(p.shape, accum_dtype), params)

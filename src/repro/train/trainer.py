@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,6 @@ class Trainer:
 
     # -- loop ---------------------------------------------------------------
     def run(self) -> Dict[str, float]:
-        mcfg = self.model_cfg
         while self.step < self.tcfg.steps and not self._stop:
             batch_np = self.data.batch(self.step)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}

@@ -1,6 +1,4 @@
 """Chunked (flash-style) attention must match the dense reference."""
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np

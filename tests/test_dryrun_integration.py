@@ -1,13 +1,10 @@
 """Launch-layer integration: lower+compile on a multi-device host mesh in a
 subprocess (keeps the main test process at 1 device), plus elastic
 checkpoint restore across mesh shapes."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

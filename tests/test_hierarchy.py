@@ -6,9 +6,8 @@ import json
 import pytest
 
 from repro import api, obs
-from repro.fleet import (AutoscaleConfig, Cell, CellAutoscaler, CellRouter,
-                         HierarchicalFleet, class_breakdown, make_trace,
-                         summarize)
+from repro.fleet import (Cell, CellRouter, HierarchicalFleet,
+                         class_breakdown, make_trace, summarize)
 from repro.fleet.hierarchy import REASON_BUDGET
 from repro.fleet.router import ADMIT_ACCEPT, ADMIT_REJECT, FleetRequest
 from repro.fleet.traces import replay_trace

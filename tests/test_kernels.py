@@ -80,7 +80,6 @@ def test_pim_mac_output_dtypes(out_dtype):
 def test_pim_mac_int32_accumulation_exact():
     """Worst-case magnitudes must not overflow/round: int32 accumulation
     over K=1024 of (+-127)^2 stays exact."""
-    M = K = N = 0
     x = np.full((8, 1024), 127, dtype=np.int8)
     w = np.full((1024, 8), -127, dtype=np.int8)
     out = pim_matmul(jnp.asarray(x), jnp.asarray(w), jnp.float32(1.0),

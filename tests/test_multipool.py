@@ -24,9 +24,8 @@ import numpy as np
 import pytest
 
 from repro import api
-from repro.core import spaces as sp
 from repro.core import workloads
-from repro.core.energy import EnergyModel, validate_placement
+from repro.core.energy import validate_placement
 from repro.core.multipool import combine_many, minplus_fold
 from repro.core.placement import (ClosedFormSolver, build_lut,
                                   combine_clusters, dp_min_energy)

@@ -1,5 +1,4 @@
 """Tests for the time-slice scheduler, energy model and system simulation."""
-import numpy as np
 import pytest
 
 from repro import api

@@ -1,0 +1,212 @@
+"""TechModel + online DVFS controller tests (DESIGN.md SS.10).
+
+Covers the per-tech-node physics (monotonicity of the energy scale in
+clock, byte-identity with the legacy inline ``dvfs_energy_scale``
+expression), DVFS bounds clamping, LUT byte-identity at the legacy
+default clock for every DVFS-capable substrate, fleet-wide clock-grid
+LUT dedupe, and determinism of the controller's per-slice solve.
+"""
+import pytest
+
+from test_multipool import lut_digest
+
+from repro import api
+from repro.core.techmodel import (CLOCK_DECIMALS, TECH_MODELS,
+                                  DVFSController, TechModel)
+
+DVFS_SUBSTRATES = tuple(
+    n for n in api.list_substrates()
+    if api.substrate(n).tech_model() is not None)
+
+
+# -- physics: vdd/freq curve + power model ----------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TECH_MODELS))
+def test_energy_scale_strictly_monotonic_in_clock(name):
+    tm = api.tech_model(name)
+    clocks = [0.05 + 0.95 * i / 40 for i in range(41)]
+    es = [tm.energy_scale(c) for c in clocks]
+    ps = [tm.power_scale(c) for c in clocks]
+    ls = [tm.leakage_scale(c) for c in clocks]
+    assert all(b > a for a, b in zip(es, es[1:])), name
+    assert all(b > a for a, b in zip(ps, ps[1:])), name
+    assert all(b > a for a, b in zip(ls, ls[1:])), name
+    # V^2 at nominal rail is exactly 1: no hidden rescaling at full clock
+    assert tm.energy_scale(1.0) == 1.0
+
+
+def test_energy_scale_matches_legacy_inline_expression():
+    """The registered models must reproduce the pre-TechModel
+    ``V = V_MIN_FRAC + (1 - V_MIN_FRAC) * clock; V**2`` arithmetic
+    bit-for-bit - this is what keeps every existing LUT byte-identical.
+    """
+    from repro.serve.gpu import TECH as GPU_TECH
+
+    for tm in TECH_MODELS.values():
+        for i in range(1, 101):
+            c = i / 100
+            v = tm.v_min_frac + (1.0 - tm.v_min_frac) * c
+            assert tm.energy_scale(c) == v * v, (tm.name, c)
+    # both serve modules still expose the historic callable, now routed
+    # through the registered model
+    from repro.serve import cxl, gpu
+    assert gpu.dvfs_energy_scale(0.45) == GPU_TECH.energy_scale(0.45)
+    assert cxl.dvfs_energy_scale(0.5) == cxl.TECH.energy_scale(0.5)
+    assert gpu.V_MIN_FRAC == GPU_TECH.v_min_frac
+
+
+def test_energy_scale_rejects_unphysical_clock():
+    tm = api.tech_model("sm-pool-7nm")
+    for bad in (0.0, -0.5, 1.5):
+        with pytest.raises(ValueError):
+            tm.energy_scale(bad)
+
+
+# -- DVFS bounds -------------------------------------------------------------
+
+
+def test_bounds_clamping():
+    tm = api.tech_model("sm-pool-7nm")
+    assert tm.clamp(0.01) == tm.dvfs_min
+    assert tm.clamp(5.0) == tm.dvfs_max
+    assert tm.clamp(0.6) == 0.6
+    assert tm.in_bounds(tm.dvfs_min) and tm.in_bounds(tm.dvfs_max)
+    assert not tm.in_bounds(tm.dvfs_min / 2)
+
+
+def test_invalid_bounds_rejected_at_construction():
+    with pytest.raises(ValueError):
+        TechModel("bad", tech_nm=7, dvfs_min=0.8, dvfs_max=0.5)
+    with pytest.raises(ValueError):
+        TechModel("bad", tech_nm=7, dvfs_min=0.0)
+    with pytest.raises(ValueError):
+        TechModel("bad", tech_nm=7, v_min_frac=0.0)
+
+
+def test_clock_grid_spans_bounds_and_merges_includes():
+    tm = api.tech_model("sm-pool-7nm")
+    grid = tm.clock_grid(5)
+    assert grid[0] == tm.dvfs_min and grid[-1] == tm.dvfs_max
+    assert list(grid) == sorted(grid) and len(set(grid)) == len(grid)
+    # explicit points merge in (clamped), duplicates collapse at the
+    # canonical rounding
+    g2 = tm.clock_grid(5, include=(0.45, 0.45 + 10 ** -(CLOCK_DECIMALS
+                                                        + 2), 0.01))
+    assert 0.45 in g2 and g2[0] == tm.dvfs_min
+    assert len(g2) == len(grid) + 1
+    assert tm.clock_grid(1) == (tm.dvfs_max,)
+    with pytest.raises(ValueError):
+        tm.clock_grid(0)
+
+
+# -- substrate axis: with_clock + byte-identity at the default clock --------
+
+
+@pytest.mark.parametrize("name", DVFS_SUBSTRATES)
+def test_with_clock_at_default_is_byte_identical(name):
+    """Regression pin: threading the clock through the TechModel must
+    not move a single LUT byte at the substrate's legacy default
+    operating point (no silent physics drift)."""
+    sub = api.substrate(name)
+    clocked = sub.with_clock(sub.lp_clock)
+    assert clocked.variant_key() == sub.variant_key()
+    model = sub.model_spec()
+    T = sub.default_t_slice_ns(model)
+    a = sub.build_lut(model, t_slice_ns=T, n_points=6)
+    b = clocked.build_lut(model, t_slice_ns=T, n_points=6)
+    assert lut_digest(a) == lut_digest(b), name
+
+
+@pytest.mark.parametrize("name", DVFS_SUBSTRATES)
+def test_with_clock_clamps_and_rekeys(name):
+    sub = api.substrate(name)
+    tm = sub.tech_model()
+    v = sub.with_clock(0.01)
+    assert v.lp_clock == tm.dvfs_min
+    assert v.variant_key() != sub.variant_key()
+
+
+def test_with_clock_requires_a_dvfs_axis():
+    with pytest.raises(ValueError):
+        api.substrate("edge-hhpim").with_clock(0.5)
+    assert api.substrate("edge-hhpim").tech_model() is None
+
+
+def test_compile_clock_grid_builds_one_lut_per_point():
+    pc = api.compiler()
+    sub = api.substrate("gpu-pool")
+    luts = pc.compile_clock_grid(sub, n_clocks=3)
+    grid = sub.tech_model().clock_grid(3, include=(sub.lp_clock,))
+    assert tuple(sorted(luts)) == grid
+    assert pc.n_builds == len(grid)
+    # a second compile of the same grid is served from cache
+    pc.compile_clock_grid(sub, n_clocks=3)
+    assert pc.n_builds == len(grid)
+    with pytest.raises(ValueError):
+        pc.compile_clock_grid(api.substrate("edge-hhpim"))
+
+
+# -- the online controller ---------------------------------------------------
+
+
+def test_controller_requires_techmodel_and_dynamic_solver():
+    with pytest.raises(ValueError):
+        api.scheduler("edge-hhpim", dvfs=True)
+    with pytest.raises(ValueError):
+        api.scheduler("gpu-pool", solver="fixed-hybrid", dvfs=True)
+
+
+def test_controller_clocks_up_under_load():
+    """The per-slice solve picks low clocks at light load (leakage-
+    dominated) and the fastest point once the slice budget binds -
+    deterministic fixed points for fixed inputs."""
+    sched = api.scheduler("gpu-pool", dvfs=True)
+    tm = api.substrate("gpu-pool").tech_model()
+    clocks = [sched.step(n).clock for n in (1, 4, 16, 64)]
+    assert all(c is not None and tm.in_bounds(c) for c in clocks)
+    assert clocks == sorted(clocks)          # never clocks down as load grows
+    assert clocks[-1] == tm.dvfs_max         # overload pins the fastest point
+    assert clocks[0] < clocks[-1]            # light load runs slower
+
+
+def test_scheduler_without_controller_reports_no_clock():
+    rep = api.scheduler("gpu-pool").step(4)
+    assert rep.clock is None
+
+
+def test_controller_determinism_under_fixed_seed():
+    from repro.fleet import make_trace, summarize
+
+    def one_run():
+        pc = api.compiler()
+        trace = make_trace("mmpp", n_slices=12, seed=7)
+        fleet = api.fleet("gpu-pool", n_engines=2, compiler=pc, dvfs=True)
+        s = summarize(fleet.run(trace))
+        clocks = [r.clock for w in fleet.workers for r in w.reports]
+        return clocks, s.energy_uj, s.deadline_miss_rate
+
+    c1, e1, m1 = one_run()
+    c2, e2, m2 = one_run()
+    assert c1 == c2 and e1 == e2 and m1 == m2
+    assert any(c is not None for c in c1)
+
+
+def test_fleet_shares_one_grid_of_luts_across_engines():
+    """N same-shape engines with the controller pay one LUT build per
+    clock grid point fleet-wide, exactly like the base builds."""
+    pc = api.compiler()
+    fleet = api.fleet("gpu-pool", n_engines=3, compiler=pc, dvfs=True)
+    grid = fleet.workers[0].sched.dvfs.clocks
+    assert pc.n_builds == len(grid)
+    assert all(w.sched.dvfs is fleet.workers[0].sched.dvfs
+               for w in fleet.workers[1:])
+
+
+def test_controller_explicit_clocks_are_clamped_and_sorted():
+    sub = api.substrate("gpu-pool")
+    ctrl = DVFSController(sub, clocks=(0.9, 0.05, 0.5))
+    tm = sub.tech_model()
+    assert ctrl.clocks == (tm.dvfs_min, 0.5, 0.9)
+    sel = ctrl.select(4)
+    assert sel is not None and sel[0] in ctrl.clocks

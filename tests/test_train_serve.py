@@ -8,12 +8,11 @@ import pytest
 from repro.configs import get_smoke_config
 from repro.data.synthetic import DataConfig
 from repro.models import lm
-from repro.models.common import ModelConfig, reduced
-from repro.models.hetero_linear import (fractions_to_counts, split_weight,
-                                        tiered_matmul)
+from repro.models.common import ModelConfig
+from repro.models.hetero_linear import split_weight, tiered_matmul
 from repro.optim.adamw import OptimizerConfig
 from repro.serve.engine import DecodeEngine, Request
-from repro.serve.hetero import HeteroServeEngine, tpu_arch, tpu_model_spec
+from repro.serve.hetero import HeteroServeEngine, tpu_arch
 from repro.train.trainer import Trainer, TrainerConfig
 
 

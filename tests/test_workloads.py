@@ -1,6 +1,5 @@
 """Tests for the Fig. 4 workload generators and the scheduler's straggler
 slowdown-factor rescaling path."""
-import numpy as np
 import pytest
 
 from repro import api
