@@ -361,7 +361,17 @@ def lut_build() -> Tuple[List[Dict], Dict]:
     ``api.fleet`` call rebuilt its shape LUTs from scratch (shape dedup
     *within* one fleet predates the compiler and is not claimed here -
     ``fleet_bringup_builds`` just confirms it still holds: 2 builds for
-    8 mixed engines)."""
+    8 mixed engines).
+
+    The ``fused`` column records which engine produced the batched
+    build: ``host`` for the closed-form/loop paths, the resolved
+    :mod:`repro.kernels.lut_pipeline` backend for dp. The clock-grid
+    row is the fused-pipeline headline (second gate, recorded to
+    ``BENCH_lut.json``): the cxl-tier-3 three-pool substrate across its
+    DVFS clock grid, solved by ONE fused launch (``build_lut_grid``)
+    vs one per-point host fold per variant -
+    ``fused_speedup_cxl3_clockgrid``, gated >= 1x and drift-checked
+    against the committed point."""
     from repro.core import placement
 
     def _time(fn, repeats: int) -> float:
@@ -385,8 +395,9 @@ def lut_build() -> Tuple[List[Dict], Dict]:
         T = sub.default_t_slice_ns(model)
         kw = dict(t_slice_ns=T, n_points=sub.lut_points, rho=em.rho, em=em,
                   method=method, static_window=sub.static_window)
-        if method == "dp":       # warm the kernel-op jit cache off-clock
+        if method == "dp":       # warm the fused-op jit cache off-clock
             placement.build_lut(sub.arch, model, **kw)
+        built = placement.build_lut(sub.arch, model, batched=True, **kw)
         t_batched = _time(lambda: placement.build_lut(
             sub.arch, model, batched=True, **kw), repeats)
         t_loop = _time(lambda: placement.build_lut(
@@ -399,7 +410,8 @@ def lut_build() -> Tuple[List[Dict], Dict]:
                      "loop_ms": round(t_loop * 1e3, 3),
                      "batched_ms": round(t_batched * 1e3, 3),
                      "speedup": round(speedup, 2),
-                     "points_per_sec": round(sub.lut_points / t_batched)})
+                     "points_per_sec": round(sub.lut_points / t_batched),
+                     "fused": built.backend or "host"})
 
     # fleet bring-up: cold = first compile of 8 mixed engines (2 distinct
     # shapes -> 2 builds); warm = a second fleet on the same compiler,
@@ -418,17 +430,53 @@ def lut_build() -> Tuple[List[Dict], Dict]:
                  "loop_ms": round(t_cold * 1e3, 3),
                  "batched_ms": round(t_warm * 1e3, 3),
                  "speedup": round(t_cold / t_warm, 2),
-                 "points_per_sec": round(8 * sub.lut_points / t_warm)})
+                 "points_per_sec": round(8 * sub.lut_points / t_warm),
+                 "fused": "host"})
+    rebringup_speedup = rows[-1]["speedup"]
+
+    # fused clock-grid build (DESIGN.md SS.6/SS.10): every DVFS clock
+    # point of the three-pool substrate solved in one fused launch vs
+    # one per-point host fold loop per variant (same bytes out -
+    # tests/test_lut_pipeline.py asserts it)
+    sub = api.substrate("cxl-tier-3")
+    t_slice = sub.default_t_slice_ns()
+    clocks = list(sub.tech_model().clock_grid(3))
+    ems = [sub.with_clock(c).energy_model() for c in clocks]
+    kw = dict(t_slice_ns=t_slice, n_points=sub.lut_points, method="dp",
+              k_groups=64, dp_ticks=512, static_window=sub.static_window)
+    grid = placement.build_lut_grid(ems, **kw)      # warm the jit cache
+    fused_backend = grid[0].backend or "host"
+    t_fused = _time(lambda: placement.build_lut_grid(ems, **kw), 2)
+
+    def _host_loop():
+        for em in ems:
+            placement.build_lut(em.arch, em.model, em=em, batched=False,
+                                **kw)
+
+    t_hloop = _time(_host_loop, 1)
+    fused_speedup = t_hloop / t_fused
+    rows.append({"substrate": f"cxl-tier-3[{len(clocks)}clk]",
+                 "method": "dp-clock-grid",
+                 "n_points": sub.lut_points,
+                 "loop_ms": round(t_hloop * 1e3, 3),
+                 "batched_ms": round(t_fused * 1e3, 3),
+                 "speedup": round(fused_speedup, 2),
+                 "points_per_sec": round(
+                     len(clocks) * sub.lut_points / t_fused),
+                 "fused": fused_backend})
 
     min_cf = min(cf_speedups.values())
     derived = {
         "closed_form_speedup_edge": round(cf_speedups["edge-hhpim"], 2),
         "closed_form_speedup_gpu": round(cf_speedups["gpu-pool"], 2),
         "batched_points_per_sec_edge": rows[0]["points_per_sec"],
-        "fleet_rebringup_speedup": rows[-1]["speedup"],
+        "fleet_rebringup_speedup": rebringup_speedup,
         "fleet_bringup_builds": cold_builds,
         "fleet_warm_builds": pc.stats()["builds"] - cold_builds,
-        "speedup_ok": bool(min_cf >= 1.0),
+        "fused_speedup_cxl3_clockgrid": round(fused_speedup, 2),
+        "fused_backend": fused_backend,
+        "fused_ok": bool(fused_speedup >= 1.0),
+        "speedup_ok": bool(min_cf >= 1.0 and fused_speedup >= 1.0),
         "closed_form_speedup_3x": bool(min_cf >= 3.0),
     }
     return rows, derived

@@ -41,6 +41,34 @@ GATES = {
     "dvfs_frontier": "frontier_ok",
 }
 
+# suites whose trajectory point lives outside BENCH_fleet.json: the
+# placement/LUT-build suite owns BENCH_lut.json (the fused-pipeline
+# speedup trajectory); everything else stays in the fleet file
+TRAJECTORY_ROUTES = {"lut_build": "BENCH_lut.json"}
+DEFAULT_TRAJECTORY = "BENCH_fleet.json"
+
+#: lut_build drift gate: the fresh fused clock-grid speedup must stay
+#: above this fraction of the committed BENCH_lut.json point. Timing on
+#: shared CI runners is noisy, so the slack is wide - the gate exists
+#: to catch the fused path silently degrading to per-point host folds
+#: (which costs ~10x), not 20% jitter.
+LUT_DRIFT_FRACTION = 0.25
+
+
+def gate_lut_drift(derived: dict, path: Path) -> list:
+    """Failure messages for the lut_build drift gate (empty = pass)."""
+    if not path.exists():
+        return [f"lut_build: no committed {path.name} to gate against"]
+    committed = json.loads(path.read_text())["suites"].get("lut_build", {})
+    ref = committed.get("fused_speedup_cxl3_clockgrid")
+    got = derived.get("fused_speedup_cxl3_clockgrid")
+    if not got:
+        return ["lut_build: fused_speedup_cxl3_clockgrid missing"]
+    if ref and got < ref * LUT_DRIFT_FRACTION:
+        return [f"lut_build: fused clock-grid speedup drifted: {got} vs "
+                f"committed {ref} (floor {LUT_DRIFT_FRACTION:.0%})"]
+    return []
+
 
 def write_trajectory(derived_all: dict, path: Path) -> None:
     """The stable perf-trajectory point: suite -> scalar metrics only
@@ -94,13 +122,21 @@ def main() -> None:
                 w.writeheader()
                 w.writerows(rows)
         print(f"{name},{us:.0f},{json.dumps(derived)}")
+    repo_root = Path(__file__).parent.parent
     if args.json:
         with open(args.json, "w") as f:
             json.dump(derived_all, f, indent=2)
         print(f"wrote {args.json}", file=sys.stderr)
-        traj = Path(__file__).parent.parent / "BENCH_fleet.json"
-        write_trajectory(derived_all, traj)
-        print(f"wrote {traj}", file=sys.stderr)
+        # fan the trajectory points out to their owning files (merge
+        # semantics per file: suites not run here are preserved)
+        by_file: dict = {}
+        for suite, derived in derived_all.items():
+            fname = TRAJECTORY_ROUTES.get(suite, DEFAULT_TRAJECTORY)
+            by_file.setdefault(fname, {})[suite] = derived
+        for fname, suites in by_file.items():
+            traj = repo_root / fname
+            write_trajectory(suites, traj)
+            print(f"wrote {traj}", file=sys.stderr)
     failed = []
     for gate in args.gate or ():
         if gate not in derived_all:
@@ -108,6 +144,10 @@ def main() -> None:
         elif not derived_all[gate].get(GATES[gate]):
             failed.append(f"{gate}: {GATES[gate]} is false "
                           f"({json.dumps(derived_all[gate])})")
+        elif gate == "lut_build":
+            failed.extend(gate_lut_drift(
+                derived_all[gate],
+                repo_root / TRAJECTORY_ROUTES["lut_build"]))
     if failed:
         for msg in failed:
             print(f"GATE FAILED {msg}", file=sys.stderr)

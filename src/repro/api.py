@@ -98,7 +98,13 @@ def lut(sub: Union[str, Substrate], workload=None, *, solver=None,
         compiler: Optional[PlacementCompiler] = None, **over):
     """Build a :class:`~repro.core.placement.PlacementLUT` for a substrate
     workload through its (or the named) solver; an explicit ``compiler``
-    routes the build through its shared cache."""
+    routes the build through its shared cache.
+
+    ``solver="dp"`` runs the fused on-device lut_pipeline op (one launch
+    for the whole t-grid; ``REPRO_LUT_BACKEND`` overrides the backend,
+    and a ``LUTMethodSolver(..., lut_backend=...)`` instance pins it
+    per-solver). The returned LUT's ``backend`` attribute records which
+    engine built it; all backends are byte-identical."""
     return substrate(sub, **over).build_lut(
         workload, solver=solver, t_slice_ns=t_slice_ns, n_points=n_points,
         rho=rho, compiler=compiler)

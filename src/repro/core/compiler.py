@@ -24,8 +24,9 @@ from typing import Dict, Iterable, Optional, Tuple, Union
 
 from repro import obs
 from repro.core.energy import EnergyModel
-from repro.core.placement import LUTEntry, PlacementLUT
-from repro.core.solvers import PlacementSolver, make_solver
+from repro.core.placement import LUTEntry, PlacementLUT, build_lut_grid
+from repro.core.solvers import (LUTMethodSolver, PlacementSolver,
+                                make_solver)
 
 CacheKey = Tuple
 
@@ -65,6 +66,16 @@ class PlacementCompiler:
         self.n_builds = 0          # cache misses -> actual solver runs
         self.n_hits = 0            # served from cache
         self.n_loaded = 0          # entries merged in by load() warm starts
+        # per-build resolved lut_pipeline backend ("host" for the
+        # closed-form / fixed / per-point paths): which engine actually
+        # built each cache miss
+        self.n_builds_by_backend: Dict[str, int] = {}
+
+    def _record_build(self, lut: PlacementLUT) -> None:
+        b = getattr(lut, "backend", None) or "host"
+        self.n_builds += 1
+        self.n_builds_by_backend[b] = self.n_builds_by_backend.get(b, 0) + 1
+        obs.metrics().counter("compiler.lut.build")
 
     # -- keys ---------------------------------------------------------------
     @staticmethod
@@ -98,16 +109,72 @@ class PlacementCompiler:
             self.n_hits += 1
             obs.metrics().counter("compiler.lut.hit")
             return hit
-        self.n_builds += 1
-        obs.metrics().counter("compiler.lut.build")
         with obs.span("compiler.lut_build", "compiler",
                       variant=str(key[0]), model=key[1],
-                      solver=sol.name, n_points=n_points):
+                      solver=sol.name, n_points=n_points) as sp_:
             built = sol.build_lut(em, t_slice_ns=t_slice_ns,
                                   n_points=n_points,
                                   static_window=static_window)
+            sp_.set("backend", getattr(built, "backend", None) or "host")
+        self._record_build(built)
         self._cache[key] = built
         return built
+
+    def lut_grid(self, ems, *, solver: Union[str, PlacementSolver],
+                 t_slice_ns: float, n_points: int,
+                 static_window: str = "t_constraint",
+                 variant_keys=None) -> list:
+        """Build-or-fetch LUTs for a batch of substrate variants.
+
+        Cache hits are served per variant; with a batched dp solver
+        every *miss* is stacked on the fused lut_pipeline op's variant
+        axis and solved in ONE device launch
+        (:func:`repro.core.placement.build_lut_grid`) - the DVFS clock
+        grid path (DESIGN.md SS.10). Other solvers fall back to one
+        :meth:`lut` call per miss. Results keep ``ems`` order.
+        """
+        sol = make_solver(solver)
+        if variant_keys is None:
+            variant_keys = [(em.arch.name,) for em in ems]
+        ems = list(ems)
+        keys = [self.cache_key(
+            variant_key=vk, model=em.model, solver_name=sol.name,
+            t_slice_ns=t_slice_ns, n_points=n_points, rho=em.rho,
+            static_window=static_window,
+            slowdown=slowdown_signature(em.time_scale))
+            for em, vk in zip(ems, variant_keys)]
+        luts = [self._cache.get(k) for k in keys]
+        for lut in luts:
+            if lut is not None:
+                self.n_hits += 1
+                obs.metrics().counter("compiler.lut.hit")
+        missing = [i for i, lut in enumerate(luts) if lut is None]
+        fusable = (isinstance(sol, LUTMethodSolver) and sol.method == "dp"
+                   and sol.batched)
+        if missing and fusable:
+            miss = [ems[i] for i in missing]
+            with obs.span("compiler.lut_build", "compiler",
+                          variant="grid", model=miss[0].model.name,
+                          solver=sol.name, n_points=n_points,
+                          n_variants=len(miss)) as sp_:
+                built = build_lut_grid(
+                    miss, t_slice_ns=t_slice_ns, n_points=n_points,
+                    static_window=static_window,
+                    dp_backend=sol.dp_backend,
+                    lut_backend=sol.lut_backend)
+                sp_.set("backend",
+                        getattr(built[0], "backend", None) or "host")
+            for i, lut in zip(missing, built):
+                self._record_build(lut)
+                self._cache[keys[i]] = lut
+                luts[i] = lut
+        elif missing:
+            for i in missing:
+                luts[i] = self.lut(
+                    ems[i], solver=sol, t_slice_ns=t_slice_ns,
+                    n_points=n_points, static_window=static_window,
+                    variant_key=variant_keys[i])
+        return luts
 
     # -- fleet bring-up -----------------------------------------------------
     def compile(self, substrates: Iterable, workload=None, *,
@@ -151,9 +218,11 @@ class PlacementCompiler:
         Each grid point is ``sub.with_clock(c)`` - a distinct
         ``variant_key()`` - so points dedupe fleet-wide exactly like
         engine shapes: N controllers on the same grid pay one build per
-        point. ``clocks=None`` takes ``n_clocks`` evenly spaced points
-        over the TechModel's DVFS bounds plus the substrate's default
-        clock (the legacy static operating point stays on the grid)."""
+        point; with a batched dp solver all missing points are solved in
+        ONE fused lut_pipeline launch (:meth:`lut_grid`). ``clocks=None``
+        takes ``n_clocks`` evenly spaced points over the TechModel's
+        DVFS bounds plus the substrate's default clock (the legacy
+        static operating point stays on the grid)."""
         tm = sub.tech_model()
         if tm is None:
             raise ValueError(
@@ -167,16 +236,15 @@ class PlacementCompiler:
         r = sub.rho if rho is None else rho
         if t_slice_ns is None:
             t_slice_ns = sub.default_t_slice_ns(model, rho=r)
-        out: Dict[float, PlacementLUT] = {}
-        for c in clocks:
-            v = sub.with_clock(c)
-            em = EnergyModel(v.arch, model, rho=r)
-            out[c] = self.lut(
-                em, solver=solver or v.solver, t_slice_ns=t_slice_ns,
-                n_points=(v.lut_points if n_points is None else n_points),
-                static_window=v.static_window,
-                variant_key=v.variant_key())
-        return out
+        clocks = list(clocks)
+        variants = [sub.with_clock(c) for c in clocks]
+        ems = [EnergyModel(v.arch, model, rho=r) for v in variants]
+        luts = self.lut_grid(
+            ems, solver=solver or sub.solver, t_slice_ns=t_slice_ns,
+            n_points=(sub.lut_points if n_points is None else n_points),
+            static_window=sub.static_window,
+            variant_keys=[v.variant_key() for v in variants])
+        return dict(zip(clocks, luts))
 
     # -- warm start ---------------------------------------------------------
     # Fleet restarts shouldn't pay bring-up compiles again: save() the
@@ -243,4 +311,5 @@ class PlacementCompiler:
 
     def stats(self) -> Dict[str, int]:
         return {"entries": len(self._cache), "builds": self.n_builds,
-                "hits": self.n_hits, "loaded": self.n_loaded}
+                "hits": self.n_hits, "loaded": self.n_loaded,
+                "builds_by_backend": dict(self.n_builds_by_backend)}

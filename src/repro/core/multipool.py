@@ -30,6 +30,22 @@ grid's tick rows instead of all ``T + 1``.
 Dtype note: inputs are combined in their own dtype (float32 DP tables,
 float64 closed-form tables) - no up-cast, so the K=2 degenerate case
 reproduces the historic pairwise arithmetic bit-for-bit.
+
+Two implementations of the same fold live here:
+
+  * the numpy pair (:func:`minplus_fold` / :func:`combine_many`) - the
+    historic host path, still the float64 closed-form combiner (jax
+    runs float32 by default, so up-lowering it would break the
+    closed-form byte contract);
+  * the jax pair (:func:`minplus_fold_jnp` / :func:`combine_rows_jnp`)
+    - the device path behind the fused LUT pipeline
+    (:mod:`repro.kernels.lut_pipeline`). ``minplus_fold_jnp`` is written
+    against pure jnp/lax primitives that lower inside a Pallas kernel
+    body, so the fused kernel and the jitted ref backend literally
+    share this function. Candidate generation order, strict-< updates
+    and first-minimum argmin are identical to the numpy pair, so both
+    produce the same float bits and the same integer splits on the
+    same float32 tables (asserted by tests/test_lut_pipeline.py).
 """
 from __future__ import annotations
 
@@ -86,10 +102,17 @@ def combine_many(tables: Sequence[np.ndarray]
     tables = [np.asarray(t) for t in tables]
     if not tables:
         raise ValueError("combine_many needs at least one cluster table")
+    if tables[0].ndim != 2:
+        raise ValueError(f"cluster 0: table must be 2-D (R, K+1), got "
+                         f"shape {tables[0].shape}")
     R, K1 = tables[0].shape
-    for t in tables[1:]:
+    for c, t in enumerate(tables[1:], start=1):
         if t.shape != (R, K1):
-            raise ValueError("cluster tables must share one (R, K+1) shape")
+            raise ValueError(
+                f"cluster {c}: table shape {t.shape} disagrees with the "
+                f"fold accumulator {(R, K1)} (cluster 0 sets the shared "
+                f"(R, K+1) shape; the fold is row-aligned, so every "
+                f"cluster must be sliced to the same rows)")
     C = len(tables)
     K = K1 - 1
     rows = np.arange(R)
@@ -122,4 +145,114 @@ def combine_many(tables: Sequence[np.ndarray]
         splits[feasible, c] = (k - i_prev)[feasible]
         k = np.where(feasible, i_prev, 0)
     splits[feasible, 0] = k[feasible]
+    return min_e, splits
+
+
+# ---------------------------------------------------------------------------
+# jax twin of the fold - shared by the fused LUT pipeline's ref backend
+# (under jit) and its Pallas kernel body (the same jnp/lax primitives
+# lower in Mosaic). Lazy jax import keeps the numpy path numpy-only.
+# ---------------------------------------------------------------------------
+
+
+def minplus_fold_jnp(a, e):
+    """jax :func:`minplus_fold`: same candidates, same order, same bits.
+
+    Iterates the prefix count ``i`` ascending with a strict ``<`` update
+    exactly like the numpy loop, so on equal inputs the returned values
+    are bit-identical and the argmin trace picks the same (first)
+    minimum. ``e`` is shifted by the traced ``i`` through an inf-padded
+    ``dynamic_slice`` (no gathers), so this body lowers both under
+    ``jax.jit`` and inside a Pallas TPU kernel.
+
+    Returns ``(out, arg)`` with ``arg`` int32 (the numpy twin returns
+    int64; both hold prefix counts ``<= K``).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    R, K1 = a.shape
+    e_pad = jnp.concatenate(
+        [jnp.full((R, K1), float("inf"), a.dtype), e], axis=1)
+
+    def body(i, carry):
+        out, arg = carry
+        f_col = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)
+        # g_shift[r, k] = e[r, k - i] for k >= i, else inf (the pad)
+        g_shift = jax.lax.dynamic_slice_in_dim(e_pad, K1 - i, K1, axis=1)
+        cand = f_col + g_shift
+        take = cand < out                  # strict: first minimum wins
+        return (jnp.where(take, cand, out),
+                jnp.where(take, jnp.int32(i), arg))
+
+    out0 = jnp.full((R, K1), float("inf"), a.dtype)
+    arg0 = jnp.zeros((R, K1), jnp.int32)
+    return jax.lax.fori_loop(0, K1, body, (out0, arg0))
+
+
+def backtrace_splits_jnp(args, i_opt, feasible, K: int, C: int):
+    """Vectorized split recovery from fold argmin traces (jax).
+
+    Args:
+      args: list of ``C - 2`` (R, K+1) int32 argmin traces (the middle
+        folds), possibly empty.
+      i_opt: (R,) int32 - argmin prefix count of the final combine.
+      feasible: (R,) bool.
+
+    Returns (R, C) int32 per-cluster counts; ``-1`` on infeasible rows.
+    The gather ``args[c][r, k[r]]`` is a one-hot reduction (no gather
+    op), so this helper also lowers inside the Pallas kernel body.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    R = i_opt.shape[0]
+    cols = []
+    k = i_opt.astype(jnp.int32)
+    last = K - k
+    for c in range(C - 2, 0, -1):
+        a_c = args[c - 1]
+        iota = jax.lax.broadcasted_iota(jnp.int32, a_c.shape, 1)
+        i_prev = jnp.sum(jnp.where(iota == k[:, None], a_c, 0), axis=1)
+        cols.append((c, k - i_prev))
+        k = i_prev.astype(jnp.int32)
+    by_cluster = {0: k, C - 1: last}
+    by_cluster.update({c: v for c, v in cols})
+    splits = jnp.stack([by_cluster[c] for c in range(C)], axis=1)
+    return jnp.where(feasible[:, None], splits,
+                     jnp.full((R, C), -1, jnp.int32))
+
+
+def combine_rows_jnp(tables):
+    """jax :func:`combine_many` over stacked tables ``(C, R, K+1)``.
+
+    Same fold order, final-combine candidates and first-minimum argmin
+    as the numpy fold, so the returned ``min_e`` bits and integer
+    ``splits`` match :func:`combine_many` exactly on equal float32
+    inputs. This is the combine the fused LUT pipeline's ref backend
+    jits; the Pallas kernel runs the same :func:`minplus_fold_jnp` /
+    :func:`backtrace_splits_jnp` bodies in-kernel.
+    """
+    import jax.numpy as jnp
+
+    C, R, K1 = tables.shape
+    K = K1 - 1
+    if C == 1:
+        min_e = tables[0, :, K]
+        feasible = jnp.isfinite(min_e)
+        splits = jnp.where(feasible[:, None], jnp.int32(K),
+                           jnp.int32(-1)).reshape(R, 1)
+        return min_e, splits
+
+    args = []
+    F = tables[0]
+    for c in range(1, C - 1):
+        F, A = minplus_fold_jnp(F, tables[c])
+        args.append(A)
+
+    cand = F + tables[C - 1][:, ::-1]      # cand[r, i] = F[r,i] + E[r,K-i]
+    i_opt = jnp.argmin(cand, axis=1).astype(jnp.int32)
+    min_e = jnp.min(cand, axis=1)
+    feasible = jnp.isfinite(min_e)
+    splits = backtrace_splits_jnp(args, i_opt, feasible, K, C)
     return min_e, splits

@@ -6,10 +6,18 @@ Three solvers, cross-validated by the test-suite:
                                    (per-cluster, integer time ticks). Kept
                                    as the float64 reference oracle; the
                                    production ``method="dp"`` path runs
-                                   the :mod:`repro.kernels.knapsack_dp` op
+                                   the fused
+                                   :mod:`repro.kernels.lut_pipeline` op
                                    (pallas / pallas_interpret / ref
-                                   backends) and backtraces over the op's
+                                   backends): all clusters' stage
+                                   tables, the consulted-row gather and
+                                   the Algorithm-2 combine in one
+                                   launch, backtracing over the op's
                                    returned stage tables.
+                                   ``batched=False`` keeps the per-point
+                                   :mod:`repro.kernels.knapsack_dp` +
+                                   host-fold loop as the byte-identity
+                                   reference.
   * :func:`combine_clusters`     - Algorithm 2, combining the per-cluster
                                    tables over (k_hp, k_lp = K - k_hp);
                                    the K=2 entry point of the min-plus
@@ -441,6 +449,10 @@ class PlacementLUT:
     arch_name: str
     model_name: str
     entries: List[LUTEntry]
+    # resolved lut_pipeline backend that built the entries (None for the
+    # host paths); informational only - backends are byte-identical, so
+    # it never participates in equality
+    backend: Optional[str] = dataclasses.field(default=None, compare=False)
 
     def lookup(self, t_constraint_ns: float) -> LUTEntry:
         """Largest grid point <= t_constraint (placement remains feasible)."""
@@ -508,38 +520,11 @@ def auto_resolution(model: sp.ModelSpec, t_slice_ns: float, *,
     return n_points, k_groups
 
 
-def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
-              t_slice_ns: float, n_points: int = 64, rho: float = 1.0,
-              method: str = "closed_form", k_groups: int = 256,
-              static_window: str = "t_constraint",
-              em: Optional[EnergyModel] = None, batched: bool = True,
-              dp_backend: str = "auto",
-              dp_ticks: int = 2048) -> PlacementLUT:
-    """Construct ``allocation_state`` - the init-time placement LUT.
-
-    ``method="closed_form"`` uses :class:`ClosedFormSolver` (exact, with
-    statics); ``method="dp"`` runs Algorithms 1+2 on the dynamic energies
-    through the :mod:`repro.kernels.knapsack_dp` op (``dp_backend``
-    selects auto / pallas / pallas_interpret / ref) and evaluates the
-    resulting placements under the full model.
-
-    ``batched=True`` (default) solves the whole t-grid in one vectorized
-    pass per cluster; ``batched=False`` keeps the per-point loop, which
-    must produce byte-identical LUTs (asserted by the equivalence suite
-    in tests/test_api.py). An explicit ``em`` (e.g. with straggler
-    ``time_scale``) overrides the default model.
-    """
-    em = em or EnergyModel(arch, model, rho=rho)
-    K = model.n_params
-    group = max(1, math.ceil(K / k_groups))
-    Kg = math.ceil(K / group)
-    t_grid = np.linspace(t_slice_ns / n_points, t_slice_ns, n_points)
-    # always include the exact peak-performance point (the paper's green
-    # dot), otherwise full-load lookups land on a coarser, slower entry.
-    t_peak = em.task_cost(em.peak_placement(sram_only=True)).t_task_ns
-    if t_peak <= t_slice_ns:
-        t_grid = np.unique(np.concatenate([t_grid, [t_peak]]))
-
+def _entry_fns(arch: sp.PIMArch, model: sp.ModelSpec, em: EnergyModel,
+               group: int, t_slice_ns: float, static_window: str):
+    """Per-build grid-point finalizers, shared by every solver driver
+    (closed-form / per-point dp / fused dp / clock-grid batched) so all
+    of them stay byte-identical past these lines."""
     pl_peak = em.peak_placement(sram_only=True)
     tc_peak = em.task_cost(pl_peak)
 
@@ -548,8 +533,6 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
 
     def _entry(t_c: float, feasible: bool,
                counts: Mapping[str, int]) -> LUTEntry:
-        """Finalize one grid point; shared by every solver driver so the
-        batched and per-point paths stay byte-identical past this line."""
         window = _window(t_c)
         if feasible:
             pl = _counts_to_placement(arch, model, counts, group)
@@ -566,6 +549,129 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
             return LUTEntry(float(t_c), dict(pl_peak), float(e_task),
                             tc_peak.t_task_ns, True)
         return LUTEntry(float(t_c), {}, INF, INF, False)
+
+    return _window, _entry, tc_peak
+
+
+@dataclasses.dataclass
+class _DPProblem:
+    """One build's Algorithm-1 discretization, ready for the fused op.
+
+    ``t_items``/``e_items`` are (C, n_max) arrays, ragged clusters
+    inert-padded with ``(t=1, e=+inf)`` - an infinite-cost space folds
+    to a bitwise copy of the previous stage, so padding changes no byte
+    of any table (and ``backtrace_tables`` walks padded stages through
+    its carry branch). ``items`` keeps the real unpadded per-cluster
+    lists for the per-point reference path.
+    """
+
+    T: int
+    tick_ns: float
+    t_grid: np.ndarray
+    rows: np.ndarray                               # (R,) consulted tick rows
+    t_items: np.ndarray                            # (C, n_max) int32
+    e_items: np.ndarray                            # (C, n_max) float32
+    items: Dict[str, Tuple[List[int], List[float]]]
+    padded_t_lists: Dict[str, List[int]]
+
+
+def _dp_problem(em: EnergyModel, arch: sp.PIMArch, group: int,
+                t_slice_ns: float, dp_ticks: int,
+                t_grid: np.ndarray) -> _DPProblem:
+    tick_ns = t_slice_ns / float(dp_ticks)
+    # The DP ceils each item's time to whole ticks, so an item spanning
+    # ~1 tick is inflated by up to 100% and the DP turns conservative.
+    # Edge archs put a weight group at tens of ticks; the serving pools
+    # (HBM-resident weights, sub-ns per-weight times) do not - refine the
+    # tick until the smallest item spans >= 8 ticks (<= 12.5% inflation),
+    # capped so the O(n*T*K) tables stay affordable.
+    min_item_ns = min((em.weight_time_ns(s) * group
+                       for c in arch.clusters for s in c.spaces
+                       if em.weight_time_ns(s) > 0), default=0.0)
+    if min_item_ns and min_item_ns / tick_ns < 8:
+        tick_ns = min_item_ns / 8
+    T = min(int(math.ceil(t_slice_ns / tick_ns)), 16384)
+    tick_ns = t_slice_ns / T
+    items: Dict[str, Tuple[List[int], List[float]]] = {}
+    for c in arch.clusters:
+        # ceil => DP never underestimates a placement's true execution time
+        t_list = [max(1, int(math.ceil(em.weight_time_ns(s) * group
+                                       / tick_ns - 1e-9)))
+                  for s in c.spaces]
+        e_list = [em.weight_energy_pj(s) * group for s in c.spaces]
+        items[c.name] = (t_list, e_list)
+    n_max = max(len(c.spaces) for c in arch.clusters)
+    t_arr = np.ones((len(arch.clusters), n_max), np.int32)
+    e_arr = np.full((len(arch.clusters), n_max), np.inf, np.float32)
+    padded: Dict[str, List[int]] = {}
+    for ci, c in enumerate(arch.clusters):
+        t_list, e_list = items[c.name]
+        t_arr[ci, :len(t_list)] = t_list
+        e_arr[ci, :len(e_list)] = e_list
+        padded[c.name] = t_list + [1] * (n_max - len(t_list))
+    rows = np.asarray([int(t_c / tick_ns) for t_c in t_grid], np.int32)
+    return _DPProblem(T, tick_ns, t_grid, rows, t_arr, e_arr, items, padded)
+
+
+def _dp_entries(arch: sp.PIMArch, prob: _DPProblem, stages: np.ndarray,
+                min_e: np.ndarray, splits: np.ndarray,
+                entry_fn) -> List[LUTEntry]:
+    """Finalize every grid point from one variant's fused-op results:
+    per-cluster stage-table backtrace at that cluster's split share,
+    then the shared entry finalizer."""
+    entries: List[LUTEntry] = []
+    for i, t_c in enumerate(prob.t_grid):
+        t_ticks = int(prob.rows[i])
+        feasible = bool(np.isfinite(min_e[i]))
+        counts: Dict[str, int] = {}
+        if feasible:
+            for ci, (c, k_c) in enumerate(zip(arch.clusters, splits[i])):
+                xs = backtrace_tables(stages[ci],
+                                      prob.padded_t_lists[c.name],
+                                      t_ticks, int(k_c))
+                for s, x in zip(c.spaces, xs):
+                    counts[s.name] = x
+        entries.append(entry_fn(t_c, feasible, counts))
+    return entries
+
+
+def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
+              t_slice_ns: float, n_points: int = 64, rho: float = 1.0,
+              method: str = "closed_form", k_groups: int = 256,
+              static_window: str = "t_constraint",
+              em: Optional[EnergyModel] = None, batched: bool = True,
+              dp_backend: str = "auto", lut_backend: str = "auto",
+              dp_ticks: int = 2048) -> PlacementLUT:
+    """Construct ``allocation_state`` - the init-time placement LUT.
+
+    ``method="closed_form"`` uses :class:`ClosedFormSolver` (exact, with
+    statics); ``method="dp"`` runs Algorithms 1+2 on the dynamic energies
+    through the fused :mod:`repro.kernels.lut_pipeline` op - per-cluster
+    stage tables, consulted-row gather and the min-plus combine with
+    argmin backtrace in one device launch. ``lut_backend`` selects
+    auto / pallas / pallas_interpret / ref for that launch (``auto``
+    defers to ``dp_backend`` for backward compatibility, then to the
+    ``REPRO_LUT_BACKEND`` environment override).
+
+    ``batched=True`` (default) solves the whole t-grid in one vectorized
+    pass per cluster; ``batched=False`` keeps the per-point loop (the
+    unfused :mod:`repro.kernels.knapsack_dp` op plus the host numpy
+    fold), which must produce byte-identical LUTs (asserted by the
+    equivalence suites in tests/test_api.py and
+    tests/test_lut_pipeline.py). An explicit ``em`` (e.g. with straggler
+    ``time_scale``) overrides the default model.
+    """
+    em = em or EnergyModel(arch, model, rho=rho)
+    K = model.n_params
+    group = max(1, math.ceil(K / k_groups))
+    Kg = math.ceil(K / group)
+    _window, _entry, tc_peak = _entry_fns(arch, model, em, group,
+                                          t_slice_ns, static_window)
+    t_grid = np.linspace(t_slice_ns / n_points, t_slice_ns, n_points)
+    # always include the exact peak-performance point (the paper's green
+    # dot), otherwise full-load lookups land on a coarser, slower entry.
+    if tc_peak.t_task_ns <= t_slice_ns:
+        t_grid = np.unique(np.concatenate([t_grid, [tc_peak.t_task_ns]]))
 
     def _split_counts(sols: Mapping[str, ClusterSolution],
                       split: Sequence[int]) -> Dict[str, int]:
@@ -616,62 +722,55 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
     if method != "dp":
         raise ValueError(method)
 
-    # -- Algorithm 1 + 2 path, per-cluster tables via the kernel op --------
-    # (lazy import: the closed-form path stays numpy-only)
+    # -- Algorithm 1 + 2 path ----------------------------------------------
+    prob = _dp_problem(em, arch, group, t_slice_ns, dp_ticks, t_grid)
+
+    if batched:
+        # Fused pipeline: every cluster's stage tables, the consulted
+        # t-grid row gather AND the min-plus combine with argmin
+        # backtrace in ONE device launch (lazy import keeps the
+        # closed-form path numpy-only). The fold is row-local, so
+        # combining only the consulted tick rows is byte-identical to
+        # combining the full tables and indexing after - the per-point
+        # path below does exactly that against the same tables.
+        from repro.kernels.lut_pipeline.ops import lut_build as fused_build
+        from repro.kernels.lut_pipeline.ops import resolve_backend
+        backend = resolve_backend(
+            lut_backend if lut_backend != "auto" else dp_backend)
+        stages, min_e_all, splits_all = fused_build(
+            prob.t_items[None], prob.e_items[None], prob.T, Kg, prob.rows,
+            backend=backend)
+        entries = _dp_entries(arch, prob, np.asarray(stages[0]),
+                              np.asarray(min_e_all[0]),
+                              np.asarray(splits_all[0]), _entry)
+        entries = _insert_entry(entries, _peak_entry(
+            em, None if static_window == "t_constraint" else t_slice_ns))
+        return PlacementLUT(arch.name, model.name, entries,
+                            backend=backend)
+
+    # Per-point reference loop: the unfused knapsack op plus the host
+    # numpy fold per grid point - the byte-identity anchor the fused
+    # path is asserted against.
     from repro.kernels.knapsack_dp.ops import knapsack_dp
 
-    tick_ns = t_slice_ns / float(dp_ticks)
-    # The DP ceils each item's time to whole ticks, so an item spanning
-    # ~1 tick is inflated by up to 100% and the DP turns conservative.
-    # Edge archs put a weight group at tens of ticks; the serving pools
-    # (HBM-resident weights, sub-ns per-weight times) do not - refine the
-    # tick until the smallest item spans >= 8 ticks (<= 12.5% inflation),
-    # capped so the O(n*T*K) tables stay affordable.
-    min_item_ns = min((em.weight_time_ns(s) * group
-                       for c in arch.clusters for s in c.spaces
-                       if em.weight_time_ns(s) > 0), default=0.0)
-    if min_item_ns and min_item_ns / tick_ns < 8:
-        tick_ns = min_item_ns / 8
-    T = min(int(math.ceil(t_slice_ns / tick_ns)), 16384)
-    tick_ns = t_slice_ns / T
     stage_tables: Dict[str, np.ndarray] = {}
-    t_items_by_cluster = {}
     for c in arch.clusters:
-        # ceil => DP never underestimates a placement's true execution time
-        t_items = [max(1, int(math.ceil(em.weight_time_ns(s) * group
-                                        / tick_ns - 1e-9)))
-                   for s in c.spaces]
-        e_items = [em.weight_energy_pj(s) * group for s in c.spaces]
+        t_list, e_list = prob.items[c.name]
         stage_tables[c.name] = np.asarray(knapsack_dp(
-            t_items, e_items, T, Kg, backend=dp_backend,
+            t_list, e_list, prob.T, Kg, backend=dp_backend,
             return_stages=True))
-        t_items_by_cluster[c.name] = t_items
-
     finals = [stage_tables[c.name][-1] for c in arch.clusters]
-    t_ticks_all = [int(t_c / tick_ns) for t_c in t_grid]
-    if batched:
-        # Min-plus K-cluster combine (Algorithm 2 for K=2) over only the
-        # consulted tick rows in one vectorized call: the fold is
-        # row-local, so slicing the rows first is byte-identical to
-        # combining the full tables and indexing after. The per-point
-        # path below slices single rows out of the same tables.
-        rows = np.asarray(t_ticks_all)
-        min_e_all, splits_all = combine_many([f[rows] for f in finals])
-    for i, t_c in enumerate(t_grid):
-        t_ticks = t_ticks_all[i]
-        if batched:
-            min_e, split = min_e_all[i], splits_all[i]
-        else:
-            m_e, s_row = combine_many(
-                [f[t_ticks:t_ticks + 1] for f in finals])
-            min_e, split = m_e[0], s_row[0]
+    for i, t_c in enumerate(prob.t_grid):
+        t_ticks = int(prob.rows[i])
+        m_e, s_row = combine_many([f[t_ticks:t_ticks + 1] for f in finals])
+        min_e, split = m_e[0], s_row[0]
         feasible = bool(np.isfinite(min_e))
         counts: Dict[str, int] = {}
         if feasible:
             # per-cluster stage-table backtrace at that cluster's share
             for c, k_c in zip(arch.clusters, split):
                 xs = backtrace_tables(stage_tables[c.name],
-                                      t_items_by_cluster[c.name],
+                                      prob.items[c.name][0],
                                       t_ticks, int(k_c))
                 for s, x in zip(c.spaces, xs):
                     counts[s.name] = x
@@ -679,3 +778,76 @@ def build_lut(arch: sp.PIMArch, model: sp.ModelSpec, *,
     entries = _insert_entry(entries, _peak_entry(
         em, None if static_window == "t_constraint" else t_slice_ns))
     return PlacementLUT(arch.name, model.name, entries)
+
+
+def build_lut_grid(ems: Sequence[EnergyModel], *, t_slice_ns: float,
+                   n_points: int = 64, method: str = "dp",
+                   k_groups: int = 256,
+                   static_window: str = "t_constraint",
+                   dp_backend: str = "auto", lut_backend: str = "auto",
+                   dp_ticks: int = 2048) -> List[PlacementLUT]:
+    """Batched LUT builds across substrate variants (DESIGN.md SS.6/SS.10).
+
+    For a DVFS clock grid every variant shares the model and cluster
+    topology but scales its energies/times, so the Algorithm-1 + 2
+    pipeline is the same shape per variant. Variants whose DP
+    discretization agrees (same tick horizon ``T``, group count and
+    grid size) are stacked on the fused op's variant axis and solved in
+    ONE device launch; the rest fall back to one launch each. Each
+    returned LUT is byte-identical to ``build_lut(em.arch, em.model,
+    em=em, method="dp", ...)`` for the matching variant.
+
+    Non-dp methods delegate to :func:`build_lut` per variant.
+    """
+    if method != "dp":
+        return [build_lut(em.arch, em.model, t_slice_ns=t_slice_ns,
+                          n_points=n_points, method=method,
+                          k_groups=k_groups, static_window=static_window,
+                          em=em, dp_backend=dp_backend,
+                          lut_backend=lut_backend, dp_ticks=dp_ticks)
+                for em in ems]
+    from repro.kernels.lut_pipeline.ops import lut_build as fused_build
+    from repro.kernels.lut_pipeline.ops import resolve_backend
+    backend = resolve_backend(
+        lut_backend if lut_backend != "auto" else dp_backend)
+
+    preps = []
+    for em in ems:
+        arch, model = em.arch, em.model
+        K = model.n_params
+        group = max(1, math.ceil(K / k_groups))
+        Kg = math.ceil(K / group)
+        _window, _entry, tc_peak = _entry_fns(arch, model, em, group,
+                                              t_slice_ns, static_window)
+        t_grid = np.linspace(t_slice_ns / n_points, t_slice_ns, n_points)
+        if tc_peak.t_task_ns <= t_slice_ns:
+            t_grid = np.unique(np.concatenate([t_grid,
+                                               [tc_peak.t_task_ns]]))
+        prob = _dp_problem(em, arch, group, t_slice_ns, dp_ticks, t_grid)
+        preps.append((em, arch, Kg, prob, _entry))
+
+    groups: Dict[tuple, List[int]] = {}
+    for idx, (em, arch, Kg, prob, _entry) in enumerate(preps):
+        key = (prob.T, Kg, len(prob.rows), prob.t_items.shape)
+        groups.setdefault(key, []).append(idx)
+
+    luts: List[Optional[PlacementLUT]] = [None] * len(preps)
+    for (T, Kg_g, _, _), idxs in groups.items():
+        stages, min_e, splits = fused_build(
+            np.stack([preps[i][3].t_items for i in idxs]),
+            np.stack([preps[i][3].e_items for i in idxs]),
+            T, Kg_g, np.stack([preps[i][3].rows for i in idxs]),
+            backend=backend)
+        stages = np.asarray(stages)
+        min_e = np.asarray(min_e)
+        splits = np.asarray(splits)
+        for v, i in enumerate(idxs):
+            em, arch, Kg, prob, _entry = preps[i]
+            entries = _dp_entries(arch, prob, stages[v], min_e[v],
+                                  splits[v], _entry)
+            entries = _insert_entry(entries, _peak_entry(
+                em, None if static_window == "t_constraint"
+                else t_slice_ns))
+            luts[i] = PlacementLUT(arch.name, em.model.name, entries,
+                                   backend=backend)
+    return luts

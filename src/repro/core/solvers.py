@@ -58,15 +58,18 @@ class LUTMethodSolver(PlacementSolver):
 
     ``batched`` selects the vectorized whole-t-grid drivers (DESIGN.md
     SS.6, the default) vs the per-point reference loop - byte-identical
-    output either way; ``dp_backend`` picks the ``knapsack_dp`` op
-    backend for ``method="dp"`` (auto / pallas / pallas_interpret /
-    ref)."""
+    output either way; ``lut_backend`` picks the fused
+    :mod:`repro.kernels.lut_pipeline` backend for ``method="dp"``
+    (auto / pallas / pallas_interpret / ref), with ``dp_backend``
+    kept as the legacy alias it defers to (and as the ``knapsack_dp``
+    backend of the unbatched reference loop)."""
 
     name: str
     method: str                     # build_lut method key
     fixed: bool = False
     batched: bool = True
     dp_backend: str = "auto"
+    lut_backend: str = "auto"
 
     def build_lut(self, em: EnergyModel, *, t_slice_ns: float,
                   n_points: int = 64, k_groups: int = 256,
@@ -75,7 +78,8 @@ class LUTMethodSolver(PlacementSolver):
                          n_points=n_points, rho=em.rho, method=self.method,
                          k_groups=k_groups, static_window=static_window,
                          em=em, batched=self.batched,
-                         dp_backend=self.dp_backend)
+                         dp_backend=self.dp_backend,
+                         lut_backend=self.lut_backend)
 
 
 @dataclasses.dataclass

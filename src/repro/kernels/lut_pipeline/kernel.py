@@ -1,0 +1,216 @@
+"""Pallas TPU kernel for the fused LUT pipeline (one launch per build).
+
+The unfused dp path runs the ``knapsack_dp`` kernel per cluster and then
+folds the gathered tables on the host (numpy ``combine_many``) - one
+device<->host round-trip per build stage. This kernel keeps the whole
+Algorithm-1 + Algorithm-2 pipeline resident: a single ``pallas_call``
+walks the grid
+
+    (v, c, i, p)  =  variant x cluster x space x K-panel,
+
+row-major (sequential on TPU), so scratch persists across steps and acts
+as the dataflow spine:
+
+  * ``S``     (T+1, Kp)  rolling stage buffer: at step ``(c, i, p)``
+               panels ``>= p`` still hold stage ``i-1``, panels ``< p``
+               already hold stage ``i`` - exactly the knapsack kernel's
+               panel chain, batched over clusters and variants;
+  * ``carry`` (T+1, 1)   the k-1 carry column across K-panels (reset to
+               +inf at ``p == 0``, i.e. per space);
+  * ``G``     (Rp, Kp)   the current cluster's final table gathered at
+               the consulted t-grid rows (filled panel-by-panel during
+               the last space);
+  * ``F``     (Rp, Kp)   Algorithm-2 fold accumulator across clusters;
+  * ``A``     (C-2, Rp, K+1) argmin traces of the middle folds, for the
+               in-kernel split backtrace.
+
+Each ``(v, c, i, p)`` step seeds its stage-output block from the
+previous stage (the k=0 base pattern when ``i == 0``, the ``S`` panel
+otherwise) and runs the t-recurrence in place - reads of row ``t``
+see the previous stage, reads of row ``t - t_i < t`` see the updated
+rows, matching the knapsack kernel's separate in/out panels bit for bit.
+At the last panel of the last space of each cluster the kernel folds
+``G`` into ``F`` (``repro.core.multipool.minplus_fold_jnp`` - the same
+function the ref backend jits), and at the last cluster it runs the
+final k=K combine plus the one-hot argmin backtrace and emits the
+per-variant ``min_e`` / ``splits`` outputs.
+
+VMEM: the stage block + S + carry are (T+1)*(2*Kp+1)*4 B, G/F another
+2*Rp*Kp*4 B (defaults T=2048, Kp=512, Rp<=72: ~8.7 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.multipool import backtrace_splits_jnp, minplus_fold_jnp
+
+# the fold/splits outputs are per-variant (Rp, FOLD_LANES) blocks; only
+# lane 0 of min_e and lanes < C of splits are meaningful (lane-width
+# padding keeps the blocks TPU-tileable)
+FOLD_LANES = 128
+
+
+def _emit(fold_ref, splits_ref, min_e, splits, Rp: int, C: int) -> None:
+    """Write the (Rp,) min-energy and (Rp, C) splits into the padded
+    per-variant output blocks."""
+    fold_ref[0] = jnp.broadcast_to(min_e[:, None], (Rp, FOLD_LANES))
+    col = jax.lax.broadcasted_iota(jnp.int32, (Rp, FOLD_LANES), 1)
+    out = jnp.full((Rp, FOLD_LANES), -1, jnp.int32)
+    for c in range(C):
+        out = jnp.where(col == c, splits[:, c:c + 1], out)
+    splits_ref[0] = out
+
+
+def _fused_kernel(t_ref, e_ref, rows_ref, stages_ref, fold_ref, splits_ref,
+                  S, carry, F, G, A, *, T1: int, K1: int, bk: int,
+                  C: int, n: int, Rp: int):
+    v = pl.program_id(0)
+    c = pl.program_id(1)
+    i = pl.program_id(2)
+    p = pl.program_id(3)
+    P = pl.num_programs(3)
+    off = pl.multiple_of(p * bk, bk)
+    t_i = t_ref[v, c, i]
+    e_i = e_ref[v, c, i]
+
+    @pl.when(p == 0)
+    def _reset_carry():
+        carry[:, :] = jnp.full((T1, 1), float("inf"), jnp.float32)
+
+    # seed this panel with the previous stage: the k=0 base pattern for
+    # the first space, the S rolling buffer (stage i-1 at panels >= p,
+    # not yet overwritten) afterwards
+    @pl.when(i == 0)
+    def _seed_base():
+        col = jax.lax.broadcasted_iota(jnp.int32, (T1, bk), 1) + off
+        stages_ref[0, 0, 0] = jnp.where(col == 0, 0.0,
+                                        float("inf")).astype(jnp.float32)
+
+    @pl.when(i > 0)
+    def _seed_prev():
+        stages_ref[0, 0, 0] = S[:, pl.ds(off, bk)]
+
+    def body(t, _):
+        row = stages_ref[0, 0, 0, t, :]        # prev stage: not yet written
+        prev_t = jnp.maximum(t - t_i, 0)
+        # dp_new[t, k] uses dp_new[t - t_i, k - 1]: rows < t are already
+        # updated in place; carry holds the updated k-1 column of the
+        # previous panel
+        shifted = jnp.concatenate(
+            [carry[prev_t, :], stages_ref[0, 0, 0, prev_t, :-1]])
+        take = jnp.where(t >= t_i, shifted + e_i, float("inf"))
+        stages_ref[0, 0, 0, t, :] = jnp.minimum(row, take)
+        return 0
+
+    jax.lax.fori_loop(0, T1, body, 0, unroll=False)
+
+    new_panel = stages_ref[0, 0, 0]            # (T1, bk): now stage i
+    carry[:, :] = new_panel[:, bk - 1:bk]
+    S[:, pl.ds(off, bk)] = new_panel
+
+    # last space of the cluster: gather the consulted t-grid rows of the
+    # cluster's final table, panel by panel
+    @pl.when(i == n - 1)
+    def _gather_rows():
+        def g_body(r, _):
+            G[r, pl.ds(off, bk)] = new_panel[rows_ref[v, r], :]
+            return 0
+        jax.lax.fori_loop(0, Rp, g_body, 0, unroll=False)
+
+    last = (i == n - 1) & (p == P - 1)
+
+    if C == 1:
+        @pl.when(last)
+        def _combine_single():
+            min_e = G[:, K1 - 1]
+            feasible = jnp.isfinite(min_e)
+            splits = jnp.where(feasible[:, None], jnp.int32(K1 - 1),
+                               jnp.int32(-1))
+            _emit(fold_ref, splits_ref, min_e, splits, Rp, 1)
+        return
+
+    @pl.when(last & (c == 0))
+    def _fold_init():
+        F[:, :] = G[:, :]
+
+    if C > 2:
+        @pl.when(last & (c > 0) & (c < C - 1))
+        def _fold_middle():
+            out, arg = minplus_fold_jnp(F[:, :K1], G[:, :K1])
+            F[:, :K1] = out
+            A[pl.ds(c - 1, 1), :, :] = arg[None]
+
+    @pl.when(last & (c == C - 1))
+    def _fold_final():
+        # final combine at k = K only: cand[r, i] = F[r, i] + E[r, K-i]
+        cand = F[:, :K1] + G[:, :K1][:, ::-1]
+        i_opt = jnp.argmin(cand, axis=1).astype(jnp.int32)
+        min_e = jnp.min(cand, axis=1)
+        feasible = jnp.isfinite(min_e)
+        args = [A[j] for j in range(C - 2)]
+        splits = backtrace_splits_jnp(args, i_opt, feasible, K1 - 1, C)
+        _emit(fold_ref, splits_ref, min_e, splits, Rp, C)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "K", "bk", "interpret"))
+def lut_pipeline_pallas(t_items: jnp.ndarray, e_items: jnp.ndarray,
+                        rows: jnp.ndarray, *, T: int, K: int,
+                        bk: int = 512, interpret: bool = False):
+    """Fused DP + combine in one ``pallas_call`` (see module docstring).
+
+    Same contract as :func:`repro.kernels.lut_pipeline.ref.lut_pipeline_ref`:
+    ``t_items``/``e_items`` (V, C, n) inert-padded costs, ``rows`` (V, R)
+    consulted tick rows; returns ``(stages, min_e, splits)`` with the
+    k=0 base stage omitted.
+    """
+    V, C, n = t_items.shape
+    R = rows.shape[1]
+    T1, K1 = T + 1, K + 1
+    if C > FOLD_LANES:
+        raise ValueError(f"cluster count {C} exceeds the splits-output "
+                         f"lane width {FOLD_LANES}")
+    Kp = K1 + ((-K1) % bk)
+    P = Kp // bk
+    Rp = R + ((-R) % 8)
+    rows_p = jnp.pad(rows, ((0, 0), (0, Rp - R)))
+
+    kernel = functools.partial(_fused_kernel, T1=T1, K1=K1, bk=bk, C=C,
+                               n=n, Rp=Rp)
+
+    def smem(arr):
+        return pl.BlockSpec(arr.shape,
+                            lambda v, c, i, p: (0,) * arr.ndim,
+                            memory_space=pltpu.SMEM)
+
+    t_arr = t_items.astype(jnp.int32)
+    e_arr = e_items.astype(jnp.float32)
+    stages, fold, splits = pl.pallas_call(
+        kernel,
+        grid=(V, C, n, P),
+        in_specs=[smem(t_arr), smem(e_arr), smem(rows_p)],
+        out_specs=(
+            pl.BlockSpec((1, 1, 1, T1, bk),
+                         lambda v, c, i, p: (v, c, i, 0, p)),
+            pl.BlockSpec((1, Rp, FOLD_LANES), lambda v, c, i, p: (v, 0, 0)),
+            pl.BlockSpec((1, Rp, FOLD_LANES), lambda v, c, i, p: (v, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((V, C, n, T1, Kp), jnp.float32),
+            jax.ShapeDtypeStruct((V, Rp, FOLD_LANES), jnp.float32),
+            jax.ShapeDtypeStruct((V, Rp, FOLD_LANES), jnp.int32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((T1, Kp), jnp.float32),           # S
+            pltpu.VMEM((T1, 1), jnp.float32),            # carry
+            pltpu.VMEM((Rp, Kp), jnp.float32),           # F
+            pltpu.VMEM((Rp, Kp), jnp.float32),           # G
+            pltpu.VMEM((max(C - 2, 1), Rp, K1), jnp.int32),  # A
+        ],
+        interpret=interpret,
+    )(t_arr, e_arr, rows_p)
+    return stages[..., :K1], fold[:, :R, 0], splits[:, :R, :C]

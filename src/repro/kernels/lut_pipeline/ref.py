@@ -1,0 +1,68 @@
+"""Jitted pure-jnp oracle for the fused LUT pipeline.
+
+One call evaluates, for every variant ``v`` of a batched build:
+
+  1. the per-cluster Algorithm-1 DP stage tables (the same
+     ``dp_space_update_ref`` fold the ``knapsack_dp`` op jits, so the
+     stage-table float bits match the unfused op exactly),
+  2. the row gather of each cluster's final table at the consulted
+     t-grid tick rows,
+  3. the Algorithm-2 min-plus combine with argmin backtrace
+     (``repro.core.multipool.combine_rows_jnp`` - the jax twin of the
+     numpy host fold, same candidates in the same order).
+
+Ragged clusters are inert-padded by the caller (``t=1, e=+inf``): an
+infinite-cost space folds to a bitwise copy of the previous stage, so
+padding changes no byte of any table or combine result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.multipool import combine_rows_jnp
+from repro.kernels.knapsack_dp.ref import dp_space_update_ref
+
+INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "K"))
+def lut_pipeline_ref(t_items: jnp.ndarray, e_items: jnp.ndarray,
+                     rows: jnp.ndarray, *, T: int, K: int):
+    """Fused DP + combine, batched over variants.
+
+    Args:
+      t_items: (V, C, n) int32 per-space tick costs (inert-padded).
+      e_items: (V, C, n) float32 per-space energies (pad ``+inf``).
+      rows:    (V, R) int32 consulted t-tick rows, ``0 <= row <= T``.
+      T, K: static tick horizon / group count (tables are (T+1, K+1)).
+
+    Returns:
+      stages: (V, C, n, T+1, K+1) float32 per-space DP tables (the k=0
+        base stage is NOT included; ops.py prepends it).
+      min_e:  (V, R) float32 minimum total energy per consulted row.
+      splits: (V, R, C) int32 per-cluster group counts (-1 infeasible).
+    """
+    V, C, n = t_items.shape
+    base = jnp.full((T + 1, K + 1), INF, jnp.float32).at[:, 0].set(0.0)
+    stages_out, min_e_out, splits_out = [], [], []
+    for v in range(V):
+        finals = []
+        stages_v = []
+        for c in range(C):
+            dp = base
+            stages_c = []
+            for i in range(n):
+                dp = dp_space_update_ref(dp, t_items[v, c, i],
+                                         e_items[v, c, i])
+                stages_c.append(dp)
+            stages_v.append(jnp.stack(stages_c))
+            finals.append(jnp.take(dp, rows[v], axis=0))
+        min_e, splits = combine_rows_jnp(jnp.stack(finals))
+        stages_out.append(jnp.stack(stages_v))
+        min_e_out.append(min_e)
+        splits_out.append(splits)
+    return (jnp.stack(stages_out), jnp.stack(min_e_out),
+            jnp.stack(splits_out))

@@ -6,7 +6,6 @@ weight migration, SLO-aware routing with optional admission control.
 
     python -m repro.launch.fleet --workload mmpp --engines 2 --requests 32
     python -m repro.launch.fleet --substrate gpu-pool --dvfs-controller ...
-    python -m repro.launch.fleet --substrate gpu-pool --dvfs 0.6 ...  # static
     python -m repro.launch.fleet --substrate cxl-tier-3 \\
         --lut-cache ckpt/luts.json ...                    # warm-start
     python -m repro.launch.fleet --trace --flight-recorder ...  # DESIGN SS.8
@@ -98,11 +97,6 @@ def main(argv=None) -> None:
                     help=f"placement solver, one of {sorted(api.SOLVERS)}")
     ap.add_argument("--mixed", action="store_true",
                     help="heterogeneous pool: odd engines get half chips")
-    ap.add_argument("--dvfs", type=float, default=None, metavar="SCALE",
-                    help="[deprecated - use --dvfs-controller] pin the "
-                         "LP/far-pool DVFS frequency scale in (0, 1] "
-                         "(gpu-pool and cxl-tier substrates); kept one "
-                         "release as the controller's single-point alias")
     ap.add_argument("--dvfs-controller", type=int, nargs="?", const=5,
                     default=None, metavar="N",
                     help="solve the DVFS clock online: pick the energy-"
@@ -154,15 +148,6 @@ def main(argv=None) -> None:
     substrate = args.substrate or ("tpu-pool-mixed" if args.mixed
                                    else "tpu-pool")
     over = {"solver": args.solver} if args.solver else {}
-    if args.dvfs is not None:
-        if not substrate.startswith(("gpu-pool", "cxl-tier")):
-            raise SystemExit(f"--dvfs sets the LP/far-pool frequency scale "
-                             f"of the gpu-pool and cxl-tier substrates; it "
-                             f"does not apply to --substrate {substrate}")
-        over["lp_clock"] = args.dvfs
-        print("note: --dvfs SCALE is deprecated and will be removed next "
-              "release; it pins the clock the online controller solves. "
-              "Use --dvfs-controller to solve it per slice.")
     if args.dvfs_controller is not None:
         if args.cells is not None:
             raise SystemExit("--dvfs-controller runs on the flat fleet "

@@ -259,8 +259,12 @@ def test_compiler_dedupes_fleet_shapes_and_serves_cache_hits():
     luts = pc.compile(variants, model, t_slice_ns=T, n_points=8)
     # 6 engines, 2 distinct shapes -> 2 builds, one LUT per shape
     assert len(luts) == 2
-    assert pc.stats() == {"entries": 2, "builds": 2, "hits": 0,
-                          "loaded": 0}
+    stats = pc.stats()
+    backends = stats.pop("builds_by_backend")
+    assert stats == {"entries": 2, "builds": 2, "hits": 0, "loaded": 0}
+    # every build is attributed to the engine that ran it ("host" for
+    # the closed-form path, the resolved lut_pipeline backend for dp)
+    assert sum(backends.values()) == 2
     # a second fleet on the same shapes is served entirely from cache
     again = pc.compile(variants, model, t_slice_ns=T, n_points=8)
     assert pc.n_builds == 2 and pc.n_hits == 2

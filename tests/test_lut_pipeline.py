@@ -1,0 +1,305 @@
+"""Fused LUT-pipeline validation (repro.kernels.lut_pipeline).
+
+Three layers of evidence that the fused op never changes a byte:
+
+  * the jax min-plus fold (``multipool.minplus_fold_jnp`` /
+    ``combine_rows_jnp``) against the numpy host fold - bitwise values,
+    identical first-minimum argmin splits, plus hypothesis property
+    tests (fold associativity on integer-valued tables, feasible-split
+    reconstruction, a K=3 brute-force oracle);
+  * the fused op across backends (``ref`` vs ``pallas_interpret``,
+    multi-panel carry chains included) against the unfused
+    ``knapsack_dp`` + ``combine_many`` reference;
+  * whole dp LUT builds: fused-batched vs per-point host loop vs the
+    clock-grid batched driver, entry-for-entry equality.
+
+hypothesis is an optional dependency: without it only the property
+tests skip; the deterministic sweeps still run.
+"""
+import numpy as np
+import pytest
+
+from conftest import given, settings, st
+
+from repro import api
+from repro.core.multipool import combine_many, combine_rows_jnp
+from repro.kernels.knapsack_dp.ops import knapsack_dp
+from repro.kernels.lut_pipeline.ops import (BACKEND_ENV, lut_build,
+                                            resolve_backend)
+
+BACKENDS = ("ref", "pallas_interpret")
+
+
+def _rand_problem(seed, *, V=1, C=2, n=2, T=24, K=4, R=6):
+    rng = np.random.default_rng(seed)
+    t_items = rng.integers(1, max(2, T // 3), size=(V, C, n))
+    e_items = rng.integers(1, 40, size=(V, C, n)).astype(np.float32)
+    rows = rng.integers(0, T + 1, size=(V, R))
+    return t_items, e_items, rows
+
+
+def _unfused(t_items, e_items, T, K, rows):
+    """Reference: per-cluster knapsack op + host numpy fold."""
+    V, C, n = t_items.shape
+    stages, min_e, splits = [], [], []
+    for v in range(V):
+        finals, stages_v = [], []
+        for c in range(C):
+            st_c = np.asarray(knapsack_dp(
+                list(t_items[v, c]), list(e_items[v, c]), T, K,
+                backend="ref", return_stages=True))
+            stages_v.append(st_c)
+            finals.append(st_c[-1][rows[v]])
+        m_e, sp = combine_many(finals)
+        stages.append(np.stack(stages_v))
+        min_e.append(m_e)
+        splits.append(sp)
+    return np.stack(stages), np.stack(min_e), np.stack(splits)
+
+
+# ---------------------------------------------------------------------------
+# jax fold vs numpy fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("C,R,K", [(1, 4, 5), (2, 6, 4), (3, 5, 3),
+                                   (5, 3, 4)])
+def test_combine_rows_jnp_matches_numpy_fold(C, R, K):
+    rng = np.random.default_rng(C * 100 + R * 10 + K)
+    tables = rng.integers(0, 50, size=(C, R, K + 1)).astype(np.float32)
+    tables[rng.random(tables.shape) < 0.3] = np.inf
+    min_e, splits = combine_rows_jnp(np.asarray(tables))
+    ref_e, ref_s = combine_many(list(tables))
+    assert np.array_equal(np.asarray(min_e), ref_e, equal_nan=True)
+    assert np.array_equal(np.asarray(splits), ref_s)
+
+
+def test_combine_many_shaped_validation_errors():
+    """Mismatched tables fail with the offending cluster index and both
+    shapes, not a broadcast error deep inside the fold."""
+    good = np.zeros((3, 4), np.float32)
+    with pytest.raises(ValueError, match="at least one cluster table"):
+        combine_many([])
+    with pytest.raises(ValueError, match=r"cluster 0: table must be 2-D"):
+        combine_many([np.zeros(4, np.float32)])
+    with pytest.raises(ValueError, match=r"cluster 1: table shape \(2, 4\)"):
+        combine_many([good, np.zeros((2, 4), np.float32)])
+    with pytest.raises(ValueError, match=r"cluster 2: table shape"):
+        combine_many([good, good, np.zeros((3, 5), np.float32)])
+
+
+def test_combine_rows_jnp_first_minimum_tie_breaking():
+    # two optimal splits: the numpy fold takes the first minimum; the
+    # jax fold must pick the same one
+    t = np.zeros((2, 1, 4), np.float32)     # every split costs 0
+    min_e, splits = combine_rows_jnp(np.asarray(t))
+    ref_e, ref_s = combine_many(list(t))
+    assert np.array_equal(np.asarray(splits), ref_s)
+    assert np.array_equal(np.asarray(min_e), ref_e)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 10_000), st.integers(2, 4), st.integers(2, 6),
+       st.integers(1, 5))
+def test_fold_associativity_property(seed, C, R, K):
+    """Folding C integer-valued tables is associative: left fold ==
+    fold of (first two) then the rest. Integer-valued float32 sums stay
+    exact, so equality is bitwise."""
+    rng = np.random.default_rng(seed)
+    tables = rng.integers(0, 30, size=(C, R, K + 1)).astype(np.float32)
+    tables[rng.random(tables.shape) < 0.25] = np.inf
+    left_e, _ = combine_many(list(tables))
+    if C > 2:
+        from repro.core.multipool import minplus_fold
+        head, _ = minplus_fold(tables[0], tables[1])
+        re_e, _ = combine_many([head] + list(tables[2:]))
+        assert np.array_equal(left_e, re_e, equal_nan=True)
+    jnp_e, _ = combine_rows_jnp(np.asarray(tables))
+    assert np.array_equal(np.asarray(jnp_e), left_e, equal_nan=True)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.integers(1, 6),
+       st.integers(2, 7))
+def test_backtrace_reconstructs_feasible_split_property(seed, C, R, K):
+    """On every feasible row the argmin backtrace must name a split that
+    (a) sums to K and (b) reproduces min_e when priced against the
+    tables."""
+    rng = np.random.default_rng(seed)
+    tables = rng.integers(0, 25, size=(C, R, K + 1)).astype(np.float32)
+    tables[rng.random(tables.shape) < 0.3] = np.inf
+    min_e, splits = map(np.asarray, combine_rows_jnp(np.asarray(tables)))
+    for r in range(R):
+        if not np.isfinite(min_e[r]):
+            assert (splits[r] == -1).all()
+            continue
+        assert splits[r].sum() == K
+        priced = sum(tables[c, r, splits[r][c]] for c in range(C))
+        assert priced == min_e[r]
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(0, 10_000), st.integers(1, 12))
+def test_k3_brute_force_oracle_property(seed, K):
+    """C=3 fold vs brute force over all (i, j, K-i-j) splits (<=12
+    weights)."""
+    rng = np.random.default_rng(seed)
+    R = 3
+    tables = rng.integers(0, 40, size=(3, R, K + 1)).astype(np.float32)
+    tables[rng.random(tables.shape) < 0.2] = np.inf
+    min_e, splits = map(np.asarray, combine_rows_jnp(np.asarray(tables)))
+    for r in range(R):
+        best = np.inf
+        for i in range(K + 1):
+            for j in range(K + 1 - i):
+                best = min(best, tables[0, r, i] + tables[1, r, j]
+                           + tables[2, r, K - i - j])
+        if np.isfinite(best):
+            assert min_e[r] == best
+            i, j, k = splits[r]
+            assert tables[0, r, i] + tables[1, r, j] + tables[2, r, k] \
+                == best
+        else:
+            assert not np.isfinite(min_e[r])
+
+
+# ---------------------------------------------------------------------------
+# fused op vs the unfused knapsack + combine_many reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("V,C,n,T,K,R,bk", [
+    (1, 2, 2, 24, 4, 6, 512),       # the edge/pool topology
+    (2, 3, 1, 30, 5, 7, 512),       # cxl-tier-3-like, variant-batched
+    (1, 2, 3, 40, 7, 5, 4),         # multi-panel carry chain (P=2)
+    (3, 1, 2, 16, 3, 4, 512),       # single cluster (no fold)
+    (2, 5, 1, 32, 6, 9, 8),         # deep fold, multi-panel
+])
+def test_fused_op_matches_unfused_reference(backend, V, C, n, T, K, R, bk):
+    t_items, e_items, rows = _rand_problem(
+        V * 7919 + C * 31 + n, V=V, C=C, n=n, T=T, K=K, R=R)
+    # exercise the inert-padding contract on one space
+    e_items[0, C - 1, n - 1] = np.inf
+    t_items[0, C - 1, n - 1] = 1
+    stages, min_e, splits = map(np.asarray, lut_build(
+        t_items, e_items, T, K, rows, backend=backend, bk=bk))
+    ref_stages, ref_e, ref_s = _unfused(t_items, e_items, T, K, rows)
+    assert np.array_equal(stages, ref_stages), "stage tables drifted"
+    assert np.array_equal(min_e, ref_e, equal_nan=True)
+    assert np.array_equal(splits, ref_s)
+
+
+def test_fused_op_backends_bitwise_identical():
+    t_items, e_items, rows = _rand_problem(5, V=2, C=3, n=2, T=28, K=5, R=8)
+    out = {b: tuple(map(np.asarray,
+                        lut_build(t_items, e_items, 28, 5, rows,
+                                  backend=b, bk=4)))
+           for b in BACKENDS}
+    for a, b in zip(out["ref"], out["pallas_interpret"]):
+        assert np.array_equal(a, b, equal_nan=True)
+
+
+def test_rows_broadcast_and_validation():
+    t_items, e_items, rows = _rand_problem(9, V=2)
+    # 1-D rows broadcast across variants
+    s1, e1, p1 = map(np.asarray, lut_build(t_items, e_items, 24, 4,
+                                           rows[0], backend="ref"))
+    s2, e2, p2 = map(np.asarray, lut_build(
+        t_items, e_items, 24, 4, np.stack([rows[0], rows[0]]),
+        backend="ref"))
+    assert np.array_equal(e1, e2, equal_nan=True)
+    with pytest.raises(ValueError, match=r"\(V, C, n\)"):
+        lut_build(t_items[0], e_items[0], 24, 4, rows[0], backend="ref")
+
+
+def test_backend_env_override_and_validation(monkeypatch):
+    monkeypatch.delenv(BACKEND_ENV, raising=False)
+    assert resolve_backend("ref") == "ref"
+    assert resolve_backend("auto") in ("ref", "pallas")
+    monkeypatch.setenv(BACKEND_ENV, "pallas_interpret")
+    assert resolve_backend("auto") == "pallas_interpret"
+    assert resolve_backend("ref") == "ref"   # explicit beats env
+    monkeypatch.setenv(BACKEND_ENV, "pallas_interpet")   # typo
+    with pytest.raises(ValueError, match="unknown lut_pipeline backend"):
+        resolve_backend("auto")
+
+
+# ---------------------------------------------------------------------------
+# whole-LUT equivalence: fused build vs per-point host fold
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dp_lut_fused_matches_per_point_host_fold(backend):
+    """build_lut(method="dp") through the fused op (either backend) is
+    entry-for-entry identical to the unfused per-point host loop
+    (batched=False: one knapsack_dp per cluster + numpy combine per
+    grid point) - the byte-identity anchor of the whole pipeline."""
+    from repro.core import spaces as csp
+    from repro.core.placement import build_lut
+    from repro.core.system import default_t_slice_ns
+    m = csp.EFFICIENTNET_B0
+    T = default_t_slice_ns(m, 4.0)
+    kw = dict(t_slice_ns=T, n_points=5, rho=4.0, method="dp",
+              k_groups=24, dp_ticks=192)
+    fused = build_lut(csp.hh_pim(), m, lut_backend=backend, **kw)
+    loop = build_lut(csp.hh_pim(), m, batched=False, **kw)
+    assert fused.entries == loop.entries
+    assert any(e.feasible for e in fused.entries)
+    assert fused.backend == backend and loop.backend is None
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_dp_lut_fused_three_pool(backend):
+    """Same identity on the K=3-pool substrate (the C>2 fold with the
+    argmin-trace backtrace actually engaged)."""
+    from repro.core.placement import build_lut
+    sub = api.substrate("cxl-tier-3")
+    em = sub.energy_model()
+    T = sub.default_t_slice_ns()
+    kw = dict(t_slice_ns=T, n_points=4, method="dp", k_groups=16,
+              dp_ticks=128, em=em, static_window=sub.static_window)
+    fused = build_lut(sub.arch, em.model, lut_backend=backend, **kw)
+    loop = build_lut(sub.arch, em.model, batched=False, **kw)
+    assert fused.entries == loop.entries
+    assert any(e.feasible for e in fused.entries)
+
+
+def test_clock_grid_build_matches_per_variant_builds():
+    """build_lut_grid stacks DVFS clock variants on the fused op's
+    variant axis; every returned LUT must be byte-identical to its own
+    single-variant build."""
+    from repro.core.placement import build_lut, build_lut_grid
+    sub = api.substrate("cxl-tier-3")
+    T = sub.default_t_slice_ns()
+    clocks = sub.tech_model().clock_grid(3)
+    ems = [sub.with_clock(c).energy_model() for c in clocks]
+    kw = dict(t_slice_ns=T, n_points=4, k_groups=16, dp_ticks=128,
+              method="dp", static_window=sub.static_window)
+    grid = build_lut_grid(ems, **kw)
+    assert len(grid) == len(clocks)
+    for em, lut in zip(ems, grid):
+        single = build_lut(em.arch, em.model, em=em, **kw)
+        assert lut.entries == single.entries
+        assert lut.backend == single.backend
+
+
+def test_compiler_clock_grid_uses_one_fused_launch():
+    """compile_clock_grid with a batched dp solver solves all missing
+    clock points in one fused launch and attributes every build to the
+    resolved lut_pipeline backend."""
+    pc = api.compiler()
+    sub = api.substrate("cxl-tier-3", solver="dp", lut_points=4)
+    luts = pc.compile_clock_grid(sub, n_clocks=3, n_points=4)
+    n = len(luts)
+    assert n >= 3
+    stats = pc.stats()
+    assert stats["builds"] == n
+    backend = resolve_backend("auto")
+    assert stats["builds_by_backend"] == {backend: n}
+    # same grid again: all hits, no new builds
+    again = pc.compile_clock_grid(sub, n_clocks=3, n_points=4)
+    assert pc.stats()["builds"] == n and pc.stats()["hits"] == n
+    for c, lut in luts.items():
+        assert again[c] is lut
