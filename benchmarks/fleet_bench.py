@@ -54,6 +54,12 @@ N_SLICES = 40
 # hierarchy suite shape: full scale vs the CI ``--quick`` scale
 HIER_FULL = dict(n_engines=512, n_cells=32, n_slices=48)
 HIER_QUICK = dict(n_engines=192, n_cells=16, n_slices=40)
+# dag_serving suite shape (heterogeneous cells; engines = cells x per)
+DAG_FULL = dict(n_cells=8, engines_per_cell=4, n_slices=48)
+DAG_QUICK = dict(n_cells=4, engines_per_cell=2, n_slices=32)
+#: per-8-engine DAG arrival rates (a DAG is ~12-26 chunks, so rates sit
+#: well below the request-level grid); scaled by n_engines / 8
+DAG_TRACE = dict(rate_low=1, rate_high=6, p_down=0.25)
 #: committed perf-trajectory point (schema bench-trajectory-v1)
 TRAJECTORY = Path(__file__).parent.parent / "BENCH_fleet.json"
 #: --gate tolerances vs the committed point (relative); miss rates are
@@ -258,6 +264,151 @@ def hierarchy_sweep(*, n_engines: int, n_cells: int, n_slices: int
     return rows, derived
 
 
+def _dag_stats(f, res) -> Dict:
+    """DAG-level outcome stats of one run: whole-DAG miss rate (budget =
+    class budget x critical path; rejected + unfinished count as
+    misses), p95 DAG latency, and energy/token including the per-edge
+    handoff tax."""
+    from repro.fleet.dag import dag_budget_slices
+    T = res.stage_result.t_slice_ns
+    n = len(res.completed) + len(res.rejected) + len(res.unfinished)
+    miss = len(res.rejected) + len(res.unfinished)
+    for d in res.completed:
+        b = dag_budget_slices(d, f.router.budget(d.slo_class),
+                              f.tenants.get(d.tenant))
+        miss += (d.latency_ns / T) > b
+    s = summarize(res)
+    energy = s.energy_uj + res.handoff_energy_pj / 1e6
+    lat = [d.latency_ns / 1e6 for d in res.completed]
+    return {
+        "n_dags": n,
+        "n_rejected": len(res.rejected),
+        "miss_rate": miss / n if n else 0.0,
+        "p95_us": (float(np.percentile(lat, 95)) * 1e3 if lat else 0.0),
+        "energy_per_token_uj": energy / s.tokens if s.tokens else 0.0,
+        "handoffs": res.handoffs,
+    }
+
+
+def dag_sweep(*, n_cells: int, engines_per_cell: int, n_slices: int
+              ) -> Tuple[List[Dict], Dict]:
+    """Stage-level co-scheduling vs request-level routing for the stock
+    mixed-tenant registry on bursty mmpp, over capacity-heterogeneous
+    cells (mixed variants alternate full/half engine shapes), plus the
+    LUT-reuse audit: a DAG fleet must pay ZERO placement builds beyond
+    the per-variant set the plain hierarchical fleet pays for the same
+    substrates.
+
+    The mixed shapes are the point of the scenario: request-level
+    routing pins a whole DAG to its admission cell, so heavy prefill
+    stages land on half-capacity cells whenever the full cells are
+    queued, while stage-level co-scheduling re-scores every stage and
+    keeps heavy stages on full-shape cells and light tool-call /
+    draft stages on the half-shape ones."""
+    from repro.fleet.dag import dag_arrivals, default_tenants
+    n_engines = n_cells * engines_per_cell
+    subs = ["tpu-pool-mixed", "gpu-pool-mixed"]
+    scale = n_engines / 8
+    kw = {k: (v * scale if k in ("rate_low", "rate_high") else v)
+          for k, v in DAG_TRACE.items()}
+
+    def run(stage_affinity: bool, seed: int, pc):
+        f = api.dag_fleet(
+            subs, tenants=default_tenants(), n_cells=n_cells,
+            engines_per_cell=engines_per_cell, compiler=pc,
+            stage_affinity=stage_affinity, forecaster="ewma",
+            forecast_margin=MARGIN, tokens_per_task=TOKENS_PER_TASK,
+            admit_headroom=2.0, seed=seed)
+        tr = dag_arrivals(f.tenants, n_slices=n_slices, base="mmpp",
+                          seed=seed, **kw)
+        return f, _dag_stats(f, f.run_dag(tr))
+
+    # LUT-reuse audit against the plain fleet's per-variant build set
+    pc_plain = api.compiler()
+    api.hierarchical_fleet(subs, n_cells=n_cells,
+                           engines_per_cell=engines_per_cell,
+                           tokens_per_task=TOKENS_PER_TASK,
+                           compiler=pc_plain)
+    builds_plain = pc_plain.n_builds
+    pc_dag = api.compiler()
+    rows: List[Dict] = []
+    agg: Dict[str, List[Dict]] = {"stage_level": [], "request_level": []}
+    for seed in SEEDS:
+        for mode, affinity in (("stage_level", True),
+                               ("request_level", False)):
+            t0 = time.perf_counter()
+            _, st = run(affinity, seed, pc_dag)
+            wall = time.perf_counter() - t0
+            agg[mode].append(st)
+            rows.append({"scenario": mode, "seed": seed,
+                         "engines": n_engines, "cells": n_cells,
+                         "wall_s": round(wall, 2),
+                         **{k: (round(v, 4) if isinstance(v, float)
+                                else v) for k, v in st.items()}})
+    builds_dag = pc_dag.n_builds
+
+    def mean(mode, key):
+        return float(np.mean([s[key] for s in agg[mode]]))
+
+    dag_miss = mean("stage_level", "miss_rate")
+    req_miss = mean("request_level", "miss_rate")
+    dag_ept = mean("stage_level", "energy_per_token_uj")
+    req_ept = mean("request_level", "energy_per_token_uj")
+    cut = (req_miss - dag_miss) * 100
+    ecut = (req_ept - dag_ept) / req_ept * 100 if req_ept else 0.0
+    derived = {
+        "n_engines": n_engines,
+        "n_cells": n_cells,
+        "tenants": ",".join(default_tenants().names()),
+        "dag_miss": round(dag_miss, 4),
+        "request_miss": round(req_miss, 4),
+        "miss_cut_points": round(cut, 1),
+        "dag_ept_uj": round(dag_ept, 3),
+        "request_ept_uj": round(req_ept, 3),
+        "energy_cut_pct": round(ecut, 1),
+        "handoffs_stage": int(sum(s["handoffs"]
+                                  for s in agg["stage_level"])),
+        "handoffs_request": int(sum(s["handoffs"]
+                                    for s in agg["request_level"])),
+        # the headline claim: stage-level co-scheduling beats
+        # request-level routing on miss rate OR energy/token
+        "dag_win_ok": cut >= 1.0 or ecut >= 1.0,
+        # the reuse claim: zero builds beyond the plain fleet's
+        # per-variant set (pinned in tests/test_dag.py too)
+        "lut_builds_plain": builds_plain,
+        "lut_builds_dag": builds_dag,
+        "lut_builds_extra": builds_dag - builds_plain,
+        "lut_reuse_ok": builds_dag - builds_plain == 0,
+    }
+    return rows, derived
+
+
+def gate_dag_against_trajectory(suite: str, derived: Dict,
+                                path: Path = TRAJECTORY) -> List[str]:
+    """dag_serving gate: the win + reuse claims must hold, energy must
+    stay within GATE_REL tolerance of the committed point, and the
+    miss-rate cut must not regress by > GATE_MISS_SLACK points."""
+    failures = []
+    for flag in ("dag_win_ok", "lut_reuse_ok"):
+        if not derived.get(flag):
+            failures.append(f"{flag} is false")
+    committed = json.loads(path.read_text())["suites"].get(suite)
+    if committed is None:
+        return failures + [f"no committed suite {suite!r} in {path}"]
+    for key in ("dag_ept_uj", "request_ept_uj"):
+        ref, got = committed.get(key), derived.get(key)
+        if ref and got and abs(got - ref) > 0.2 * ref:
+            failures.append(f"{key}: {got} vs committed {ref} "
+                            f"(tolerance 20%)")
+    ref_cut = committed.get("miss_cut_points")
+    if ref_cut is not None and (derived["miss_cut_points"]
+                                < ref_cut - GATE_MISS_SLACK):
+        failures.append(f"miss_cut_points regressed: "
+                        f"{derived['miss_cut_points']} vs committed "
+                        f"{ref_cut} (slack {GATE_MISS_SLACK} points)")
+    return failures
+
+
 def merge_trajectory(suite: str, derived: Dict,
                      path: Path = TRAJECTORY) -> None:
     """Read-modify-write the committed trajectory point: update ONE
@@ -302,7 +453,8 @@ def gate_against_trajectory(suite: str, derived: Dict,
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--suite", default="forecast",
-                    choices=("forecast", "hierarchy", "all"))
+                    choices=("forecast", "hierarchy", "dag_serving",
+                             "all"))
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized hierarchy suite "
                          f"({HIER_QUICK['n_engines']} engines instead of "
@@ -383,6 +535,32 @@ def main(argv=None) -> None:
             print(f"merged suite {suite_name} into {TRAJECTORY}")
         if args.gate:
             gate_failures = gate_against_trajectory(suite_name, derived)
+
+    if args.suite in ("dag_serving", "all"):
+        shape = dict(DAG_QUICK if args.quick else DAG_FULL)
+        if args.cells is not None:
+            shape["n_cells"] = args.cells
+        if args.engines is not None:
+            shape["engines_per_cell"] = max(
+                args.engines // shape["n_cells"], 1)
+        suite_name = ("dag_serving_quick" if args.quick
+                      else "dag_serving")
+        t0 = time.perf_counter()
+        rows, derived = dag_sweep(**shape)
+        us = (time.perf_counter() - t0) * 1e6
+        payload["dag_serving"] = {"rows": rows, "derived": derived}
+        print(f"dag_sweep,{us:.0f},{json.dumps(derived)}")
+        for r in rows:
+            print(f"  {r['scenario']:14s} seed={r['seed']} "
+                  f"miss={r['miss_rate']:.3f} p95={r['p95_us']:.2f}us "
+                  f"e/tok={r['energy_per_token_uj']:.2f}uJ "
+                  f"handoffs={r['handoffs']}")
+        if args.update_trajectory:
+            merge_trajectory(suite_name, derived)
+            print(f"merged suite {suite_name} into {TRAJECTORY}")
+        if args.gate:
+            gate_failures += gate_dag_against_trajectory(suite_name,
+                                                         derived)
 
     with open(out_dir / "fleet_bench.json", "w") as f:
         json.dump(payload, f, indent=2)

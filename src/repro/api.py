@@ -49,7 +49,8 @@ from repro.core.techmodel import (TECH_MODELS, DVFSController,  # noqa: F401
 
 __all__ = [
     "substrate", "solver", "lut", "scheduler", "engine", "fleet",
-    "hierarchical_fleet", "compiler", "obs", "PlacementCompiler",
+    "hierarchical_fleet", "dag_fleet", "compiler", "obs",
+    "PlacementCompiler",
     "Substrate", "PlacementSolver", "SUBSTRATES", "SOLVERS",
     "register_substrate", "register_solver", "available_substrates",
     "list_substrates", "TechModel", "DVFSController", "TECH_MODELS",
@@ -404,3 +405,46 @@ def hierarchical_fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None,
         autoscaler=scaler, cell_policy=cell_policy,
         energy_weight=energy_weight, admit_headroom=admit_headroom,
         seed=seed)
+
+
+def dag_fleet(sub: Union[str, Substrate] = "tpu-pool", cfg=None, *,
+              tenants=None, budgets: Optional[dict] = None,
+              stage_affinity: bool = True,
+              handoff_tax_slices: float = 0.25,
+              handoff_energy_pj: float = 2e5,
+              affinity_bonus: float = 0.1, **kw):
+    """Construct a multi-tenant DAG-serving fleet (DESIGN.md SS.11).
+
+    Same cell bring-up as :func:`hierarchical_fleet` (every keyword it
+    takes passes through - ``n_cells``, ``engines_per_cell``,
+    ``compiler``, ``autoscale``, ...), returning a
+    :class:`~repro.fleet.dag.DagFleet` whose :meth:`~repro.fleet.dag.
+    DagFleet.run_dag` co-schedules DAG *stages* across the cells.
+    ``tenants`` is a :class:`~repro.fleet.dag.TenantRegistry` (or a
+    sequence of :class:`~repro.fleet.dag.Tenant`); the default registry
+    is :func:`~repro.fleet.dag.default_tenants` with matching
+    ``budgets`` - every tenant's SLO class must be registered in
+    ``budgets`` or construction raises a shaped error. Stage placement
+    reads the per-variant LUTs compiled at bring-up, so a DAG fleet
+    pays **zero** placement builds beyond the plain fleet's set."""
+    from repro.fleet.dag import (DEFAULT_DAG_BUDGETS, DagFleet, Tenant,
+                                 TenantRegistry, default_tenants)
+
+    if tenants is None:
+        tenants = default_tenants()
+    elif not isinstance(tenants, TenantRegistry):
+        tenants = TenantRegistry(tuple(
+            t if isinstance(t, Tenant) else Tenant(**t) for t in tenants))
+    if budgets is None:
+        budgets = dict(DEFAULT_DAG_BUDGETS)
+    hf = hierarchical_fleet(sub, cfg, budgets=budgets, **kw)
+    return DagFleet(
+        hf.cells, tenants=tenants, stage_affinity=stage_affinity,
+        handoff_tax_slices=handoff_tax_slices,
+        handoff_energy_pj=handoff_energy_pj,
+        affinity_bonus=affinity_bonus, budgets=hf.router.budgets,
+        slo_slices=hf.slo_slices,
+        tokens_per_request=hf.tokens_per_request,
+        autoscaler=hf.autoscaler, cell_policy=hf.router.cell_policy,
+        energy_weight=hf.router.energy_weight,
+        admit_headroom=hf.router.admit_headroom, seed=hf.seed)

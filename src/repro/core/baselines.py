@@ -31,5 +31,3 @@ def hybrid_policy(model: sp.ModelSpec) -> Tuple[sp.PIMArch, Placement]:
     """Hybrid-PIM: 8 HP modules; weights in MRAM, SRAM as I/O buffer."""
     arch = sp.hybrid_pim()
     return arch, {"hp_mram": model.n_params}
-
-

@@ -22,6 +22,7 @@ from repro.core.energy import EnergyModel, Placement
 from repro.core.placement import PlacementLUT
 from repro.core.solvers import PlacementSolver, make_solver
 
+
 @dataclasses.dataclass
 class SliceReport:
     slice_idx: int
@@ -202,6 +203,17 @@ class TimeSliceScheduler:
         elif obs.enabled():
             obs.counter("sched.lut.hit")
         return self._lut_cache[key]
+
+    def stage_cost(self, n_tasks: int) -> "tuple[float, float]":
+        """Read-only LUT consultation for stage co-scheduling
+        (:mod:`repro.fleet.dag`): the ``(t_task_ns, e_dyn_task_pj)``
+        this engine would pay per task if ``n_tasks`` were due in one
+        slice. Shares :attr:`lut` (the SS.6 variant-key cache), so the
+        query costs zero builds beyond the engine's own LUT and never
+        mutates scheduler state (no migration, no report)."""
+        entry = self.lut.lookup(self.t_slice_ns / max(n_tasks, 1))
+        cost = self.em.task_cost(entry.placement)
+        return cost.t_task_ns, cost.e_dyn_task_pj
 
     # -- one slice ----------------------------------------------------------
     def step(self, n_tasks: int, *, lookup_tasks: Optional[int] = None,

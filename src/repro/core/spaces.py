@@ -153,7 +153,8 @@ class PIMArch:
 
 
 def _mk_cluster(name: str, mram: MemorySpec | None, sram: MemorySpec,
-                pe: PESpec, n_modules: int, sram_banks: int = 1) -> ClusterSpec:
+                pe: PESpec, n_modules: int,
+                sram_banks: int = 1) -> ClusterSpec:
     spaces = []
     if mram is not None:
         spaces.append(StorageSpace(f"{name}_mram", name, mram, sram, pe,

@@ -18,6 +18,12 @@ through re-tiered weights.
 """
 from __future__ import annotations
 
+from repro.fleet.dag import (DAG_SPECS, DagCoScheduler,  # noqa: F401
+                             DagFleet, DagRequest, DagResult, DagSpec,
+                             DagTrace, StageRequest, StageSpec, Tenant,
+                             TenantRegistry, dag_arrivals,
+                             default_tenants, make_dag_spec,
+                             tenant_breakdown)
 from repro.fleet.forecast import (FORECASTERS, Forecaster,  # noqa: F401
                                   make_forecaster)
 from repro.fleet.hierarchy import (CELL_POLICIES,  # noqa: F401
@@ -39,4 +45,8 @@ __all__ = [
     "POLICIES", "FleetSummary", "summarize", "class_breakdown",
     "Cell", "CellRouter", "CellAutoscaler", "AutoscaleConfig",
     "HierarchicalFleet", "HierarchyResult", "ScaleEvent", "CELL_POLICIES",
+    "DagSpec", "StageSpec", "DAG_SPECS", "make_dag_spec",
+    "Tenant", "TenantRegistry", "default_tenants",
+    "DagTrace", "dag_arrivals", "DagRequest", "StageRequest",
+    "DagCoScheduler", "DagFleet", "DagResult", "tenant_breakdown",
 ]

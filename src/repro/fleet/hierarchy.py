@@ -240,9 +240,18 @@ class CellRouter:
         self.cell_policy = cell_policy
 
     def budget(self, slo_class: str) -> float:
-        """SLO budget of a class, in slices (unknown classes inherit the
-        default budget)."""
-        return self.budgets.get(slo_class, self.budgets["default"])
+        """SLO budget of a class, in slices. Unknown classes raise a
+        shaped error naming the class and listing the registered set -
+        classes are registered via ``budgets=`` (or inherited from
+        ``class_mix=`` at fleet construction); there is no silent
+        default fallback."""
+        try:
+            return self.budgets[slo_class]
+        except KeyError:
+            raise ValueError(
+                f"unknown SLO class {slo_class!r}; registered: "
+                f"{sorted(self.budgets)} (register it via budgets= or "
+                f"class_mix=)") from None
 
     def refresh(self) -> None:
         """Once per slice: refresh every cell's capacity/energy estimate
@@ -275,7 +284,8 @@ class CellRouter:
                 if obs.enabled():
                     reason = ("ok" if rank == 0 else "preferred_over_budget")
                     obs.counter("fleet.admission", decision=req.admission,
-                                reason=reason, cls=req.slo_class)
+                                reason=reason, cls=req.slo_class,
+                                tenant=req.tenant)
                     obs.counter("cell.dispatch", cell=c.cid)
                 c.dispatch(req, self.cell_policy)
                 return True
@@ -283,10 +293,12 @@ class CellRouter:
         req.admission = ADMIT_REJECT
         if obs.enabled():
             obs.counter("fleet.admission", decision=ADMIT_REJECT,
-                        reason=REASON_BUDGET, cls=req.slo_class)
+                        reason=REASON_BUDGET, cls=req.slo_class,
+                        tenant=req.tenant)
             obs.instant("fleet.reject", cat="fleet",
                         args={"rid": req.rid, "reason": REASON_BUDGET,
-                              "cls": req.slo_class, "budget": b})
+                              "cls": req.slo_class, "tenant": req.tenant,
+                              "budget": b})
         return False
 
 
@@ -459,6 +471,10 @@ class HierarchicalFleet:
             total = sum(class_mix.values())
             self._classes = sorted(class_mix)
             self._probs = [class_mix[c] / total for c in self._classes]
+            # classes the mix generates without an explicit budget
+            # inherit the default one (budget() itself never falls back)
+            for c in self._classes:
+                self.router.budgets.setdefault(c, slo_slices)
         else:
             self._classes = ["default"]
             self._probs = [1.0]
@@ -475,14 +491,10 @@ class HierarchicalFleet:
     def n_engines(self) -> int:
         return sum(c.n_active for c in self.cells)
 
-    def _record_frame(self, recorder, s: int, n_arr: int, done_n: int,
-                      rejected_now: int, scaled: List[ScaleEvent],
-                      trace: Trace, lat_ms: List[float], n_miss: int,
-                      slo_ms: float) -> None:
-        """Flight frame with per-cell aggregates (schema: DESIGN.md SS.9;
-        the flat fleet's per-engine form is SS.8)."""
-        reg = obs.metrics()
-        cells = [{
+    def _cell_states(self) -> List[Dict]:
+        """Per-cell aggregate state for a flight frame (shared by the
+        plain and DAG run loops; schema: DESIGN.md SS.9)."""
+        return [{
             "cell": c.cid,
             "engines": c.n_active,
             "parked": len(c.parked),
@@ -491,6 +503,15 @@ class HierarchicalFleet:
             "capacity_per_engine": round(c._cap_engine, 2),
             "recent_miss_rate": round(c.recent_miss_rate(), 4),
         } for c in self.cells]
+
+    def _record_frame(self, recorder, s: int, n_arr: int, done_n: int,
+                      rejected_now: int, scaled: List[ScaleEvent],
+                      trace: Trace, lat_ms: List[float], n_miss: int,
+                      slo_ms: float) -> None:
+        """Flight frame with per-cell aggregates (schema: DESIGN.md SS.9;
+        the flat fleet's per-engine form is SS.8)."""
+        reg = obs.metrics()
+        cells = self._cell_states()
         denom = len(lat_ms) + (n_miss - sum(x > slo_ms for x in lat_ms))
         miss_rate = (n_miss / denom) if denom else 0.0
         recorder.record(s, {

@@ -45,6 +45,7 @@ class FleetRequest:
     latency_ns: Optional[float] = None
     rejected: bool = False
     slo_class: str = "default"    # per-class SLO/queue-wait attribution
+    tenant: str = "-"             # owning tenant ("-" = untenanted)
     admission: Optional[str] = None   # ADMIT_* outcome stamped by the router
     # hierarchical routing (repro.fleet.hierarchy): cell id + the wait the
     # global tier predicted at admission (feeds the cell's bias EWMA)
@@ -125,7 +126,7 @@ class EngineWorker:
                 obs.observe("fleet.queue_wait_slices",
                             slice_idx - req.arrival_slice,
                             buckets=obs.WAIT_SLICE_BUCKETS,
-                            cls=req.slo_class)
+                            cls=req.slo_class, tenant=req.tenant)
         if self.substrate is not None:
             self.substrate.apply_placement(rep.placement, sink=self.hetero)
         elif self.hetero is not None:
@@ -187,7 +188,8 @@ class FleetRouter:
             req.admission = ADMIT_REJECT
             if obs.enabled():
                 obs.counter("fleet.admission", decision=ADMIT_REJECT,
-                            reason="all_queues_full", cls=req.slo_class)
+                            reason="all_queues_full", cls=req.slo_class,
+                            tenant=req.tenant)
                 obs.instant("fleet.reject", cat="fleet",
                             args={"rid": req.rid,
                                   "reason": "all_queues_full",
@@ -197,10 +199,12 @@ class FleetRouter:
         if obs.enabled():
             if req.admission == ADMIT_DEFER:
                 obs.counter("fleet.admission", decision=ADMIT_DEFER,
-                            reason="preferred_full", cls=req.slo_class)
+                            reason="preferred_full", cls=req.slo_class,
+                            tenant=req.tenant)
             else:
                 obs.counter("fleet.admission", decision=ADMIT_ACCEPT,
-                            reason="ok", cls=req.slo_class)
+                            reason="ok", cls=req.slo_class,
+                            tenant=req.tenant)
         self.workers[i].enqueue(req)
         return True
 

@@ -11,6 +11,20 @@ weight migration, SLO-aware routing with optional admission control.
     python -m repro.launch.fleet --trace --flight-recorder ...  # DESIGN SS.8
     python -m repro.launch.fleet --cells 16 --engines 128 \\
         --autoscale --max-engines 512 --no-decode          # DESIGN SS.9
+    python -m repro.launch.fleet --workload dag:mixed --cells 4 \\
+        --engines 8                                        # DESIGN SS.11
+
+``--workload dag:<spec>`` switches to the multi-tenant DAG-serving
+fleet (:mod:`repro.fleet.dag`): requests become stage DAGs
+(``dag:mixed`` runs the stock mixed-tenant registry; ``dag:agentic`` /
+``dag:prefill_decode`` / ``dag:draft_verify`` run one canonical spec
+for an interactive + a batch tenant), stages are co-scheduled across
+cells against the bring-up placement LUTs, and the summary gains
+per-tenant columns. ``--tenants name:class[:spec[:weight]],...``
+replaces the registry; unknown spec names raise shaped errors listing
+the registered ones. ``--request-level`` pins every stage to its DAG's
+admission cell (the baseline ``fleet_bench --suite dag_serving``
+compares against).
 
 ``--cells N`` switches to the two-level hierarchical fleet
 (:mod:`repro.fleet.hierarchy`): ``--engines`` becomes the total initial
@@ -46,11 +60,44 @@ from repro.fleet.router import POLICIES
 from repro.fleet.traces import TRACES
 
 
+def _dag_tenants(spec_str):
+    """Parse ``--tenants name:slo_class[:dag_spec[:weight]],...`` into a
+    TenantRegistry (shaped errors surface as SystemExit)."""
+    from repro.fleet.dag import Tenant, TenantRegistry
+    tenants = []
+    for part in spec_str.split(","):
+        bits = part.split(":")
+        if len(bits) < 2 or not bits[0] or not bits[1]:
+            raise SystemExit(
+                f"bad --tenants entry {part!r}; expected "
+                f"name:slo_class[:dag_spec[:weight]]")
+        dag = bits[2] if len(bits) > 2 and bits[2] else "prefill_decode"
+        weight = float(bits[3]) if len(bits) > 3 else 1.0
+        try:
+            tenants.append(Tenant(bits[0], bits[1], weight=weight,
+                                  dag=dag))
+        except ValueError as e:
+            raise SystemExit(f"--tenants: {e}") from None
+    return TenantRegistry(tuple(tenants))
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--workload", default="mmpp",
-                    help=f"arrival trace: one of {sorted(TRACES)} or a "
-                         f"case* scenario (default mmpp)")
+                    help=f"arrival trace: one of {sorted(TRACES)}, a "
+                         f"case* scenario, or dag:<spec> for the DAG "
+                         f"fleet (default mmpp)")
+    ap.add_argument("--tenants", default=None, metavar="SPEC",
+                    help="DAG tenant registry: comma-separated "
+                         "name:slo_class[:dag_spec[:weight]] entries "
+                         "(dag:* workloads; default: the stock mixed "
+                         "registry)")
+    ap.add_argument("--dag-base", default="mmpp", metavar="TRACE",
+                    help="arrival process under a dag:* workload "
+                         "(default mmpp)")
+    ap.add_argument("--request-level", action="store_true",
+                    help="disable stage affinity: route whole DAGs at "
+                         "admission (comparison baseline)")
     ap.add_argument("--trace", nargs="?", const="trace.json", default=None,
                     metavar="PATH",
                     help="enable structured tracing; write Chrome "
@@ -121,6 +168,12 @@ def main(argv=None) -> None:
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
 
+    is_dag = args.workload.startswith("dag:")
+    if is_dag and args.cells is None:
+        args.cells = 2                # DAG serving is inherently celled
+    if not is_dag and args.tenants is not None:
+        raise SystemExit("--tenants requires a dag:<spec> workload")
+
     if args.autoscale and args.cells is None:
         raise SystemExit("--autoscale requires --cells")
 
@@ -135,9 +188,12 @@ def main(argv=None) -> None:
                 path=args.flight_recorder)
         obs.enable(flight_recorder=rec)
 
-    trace = make_trace(args.workload, n_slices=args.steps, seed=args.seed)
-    if args.requests is not None:
-        trace = trace.truncated(args.requests)
+    trace = None
+    if not is_dag:
+        trace = make_trace(args.workload, n_slices=args.steps,
+                           seed=args.seed)
+        if args.requests is not None:
+            trace = trace.truncated(args.requests)
 
     if args.substrate and args.mixed \
             and not args.substrate.endswith("-mixed"):
@@ -185,7 +241,77 @@ def main(argv=None) -> None:
                   f"{args.lut_cache}")
 
     hier = None
-    if args.cells is not None:
+    if is_dag:
+        from repro.fleet.dag import (DEFAULT_DAG_BUDGETS, dag_arrivals,
+                                     default_tenants, make_dag_spec,
+                                     tenant_breakdown)
+        spec_name = args.workload[len("dag:"):] or "mixed"
+        if args.tenants is not None:
+            tenants = _dag_tenants(args.tenants)
+        elif spec_name == "mixed":
+            tenants = default_tenants()
+        else:
+            from repro.fleet.dag import Tenant, TenantRegistry
+            try:
+                make_dag_spec(spec_name)
+            except ValueError as e:
+                raise SystemExit(f"--workload {args.workload}: {e}") \
+                    from None
+            tenants = TenantRegistry((
+                Tenant("interactive", "interactive", dag=spec_name),
+                Tenant("batch", "batch", dag=spec_name),
+            ))
+        # every tenant class must be registered; the CLI registers
+        # unbudgeted ones at the default 2-slice SLO explicitly
+        budgets = dict(DEFAULT_DAG_BUDGETS)
+        for t in tenants:
+            budgets.setdefault(t.slo_class, 2.0)
+        per_cell = max(args.engines // args.cells, 1)
+        dagf = api.dag_fleet(
+            substrate, cfg, tenants=tenants, budgets=budgets,
+            stage_affinity=not args.request_level,
+            n_cells=args.cells, engines_per_cell=per_cell,
+            forecaster=args.forecaster, cell_policy=args.cell_policy,
+            autoscale=args.autoscale,
+            tokens_per_task=args.tokens_per_task,
+            forecast_margin=args.margin, compiler=pc, seed=args.seed,
+            **over)
+        dag_tr = dag_arrivals(tenants, n_slices=args.steps,
+                              base=args.dag_base, seed=args.seed)
+        T_us = dagf.cells[0].t_slice_ns / 1e3
+        mode = "request-level" if args.request_level else "stage-level"
+        print(f"dag fleet: {args.cells} cells x {per_cell} engines on "
+              f"{substrate}, {mode} placement, "
+              f"tenants={','.join(tenants.names())}, "
+              f"t_slice={T_us:.2f} us, trace={dag_tr.name} "
+              f"({dag_tr.total} dags / {len(dag_tr)} slices)")
+
+        def cb(s, arrivals, done_dags, cells):
+            if args.quiet:
+                return
+            bl = "/".join(str(c.backlog) for c in cells)
+            print(f"  slice {s:3d} dags-in {len(arrivals):3d} dags-done "
+                  f"{done_dags:3d} backlog {bl}")
+
+        res = dagf.run_dag(dag_tr, verbose_cb=cb)
+        s = summarize(res)
+        n_dags = (len(res.completed) + len(res.rejected)
+                  + len(res.unfinished))
+        print(f"dags: completed {len(res.completed)}/{n_dags} "
+              f"(rejected {len(res.rejected)}, unfinished "
+              f"{len(res.unfinished)}), {res.handoffs} handoffs "
+              f"({res.handoff_energy_pj / 1e6:.2f} uJ handoff energy)")
+        tb = tenant_breakdown(res, dagf)
+        print(f"{'tenant':<10s} {'class':<12s} {'dag':<15s} "
+              f"{'done':>5s} {'rej':>4s} {'unf':>4s} {'miss':>6s} "
+              f"{'p95_us':>8s} {'handoffs':>8s}")
+        for name, row in tb.items():
+            print(f"{name:<10s} {row['slo_class']:<12s} "
+                  f"{row['dag']:<15s} {row['n_completed']:5d} "
+                  f"{row['n_rejected']:4d} {row['n_unfinished']:4d} "
+                  f"{row['deadline_miss_rate']:6.3f} "
+                  f"{row['p95_ms'] * 1e3:8.2f} {row['handoffs']:8d}")
+    elif args.cells is not None:
         per_cell = max(args.engines // args.cells, 1)
         max_per_cell = (per_cell if args.max_engines is None
                         else max(args.max_engines // args.cells, per_cell))
@@ -199,11 +325,12 @@ def main(argv=None) -> None:
             **over)
         n_engines = hier.n_engines
         T_us = hier.cells[0].t_slice_ns / 1e3
+        ceiling = (f" (ceiling {max_per_cell * args.cells})"
+                   if args.autoscale else "")
         print(f"fleet: {args.cells} cells x {per_cell} engines "
               f"({n_engines} total) on {substrate}, "
               f"cell-policy={args.cell_policy}, "
-              f"autoscale={'on' if args.autoscale else 'off'}"
-              f"{f' (ceiling {max_per_cell * args.cells})' if args.autoscale else ''}, "
+              f"autoscale={'on' if args.autoscale else 'off'}{ceiling}, "
               f"forecaster={args.forecaster}, t_slice={T_us:.2f} us, "
               f"trace={trace.name} ({trace.total} requests / "
               f"{len(trace)} slices, peak {trace.peak}/slice)")
@@ -305,8 +432,18 @@ def main(argv=None) -> None:
             print(f"wrote {paths['trace']} ({len(obs.tracer())} events; "
                   f"load at ui.perfetto.dev) and {paths['metrics']}")
     if args.json:
+        out = s.as_dict()
+        if is_dag:
+            out["dag"] = {
+                "n_completed": len(res.completed),
+                "n_rejected": len(res.rejected),
+                "n_unfinished": len(res.unfinished),
+                "handoffs": res.handoffs,
+                "handoff_energy_pj": res.handoff_energy_pj,
+                "tenants": tb,
+            }
         with open(args.json, "w") as f:
-            json.dump(s.as_dict(), f, indent=2)
+            json.dump(out, f, indent=2)
         print(f"wrote {args.json}")
 
 

@@ -106,7 +106,7 @@ def set_flight_recorder(rec: Optional[FlightRecorder]) -> None:
     _flight = rec
 
 
-# -- recording shorthands ------------------------------------------------------
+# -- recording shorthands -----------------------------------------------------
 def span(name: str, cat: str = "repro", *, tid: Optional[int] = None,
          **attrs):
     """Context-manager span; the shared no-op singleton when disabled."""

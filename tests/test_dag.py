@@ -1,0 +1,305 @@
+"""Tests for repro.fleet.dag (DESIGN.md SS.11): DAG workload model +
+tenant registry validation, seeded trace determinism, the topological
+frontier property, stage co-scheduling vs request-level routing, the
+zero-extra-LUT-builds pin, per-tenant observability and the CLI entry.
+"""
+import json
+
+import pytest
+
+from conftest import given, settings, st
+from repro import api, obs
+from repro.fleet import (DAG_SPECS, DagFleet, DagSpec, StageSpec, Tenant,
+                         TenantRegistry, dag_arrivals, default_tenants,
+                         make_dag_spec, make_trace, summarize,
+                         tenant_breakdown)
+from repro.fleet.dag import (DEFAULT_DAG_BUDGETS, DONE, PENDING,
+                             REASON_TENANT_BUDGET, dag_budget_slices)
+
+
+def _small_fleet(**kw):
+    kw.setdefault("n_cells", 2)
+    kw.setdefault("engines_per_cell", 1)
+    kw.setdefault("seed", 0)
+    return api.dag_fleet(["tpu-pool", "gpu-pool"], **kw)
+
+
+def _small_trace(fleet, n_slices=10, seed=0):
+    return dag_arrivals(fleet.tenants, n_slices=n_slices, base="poisson",
+                        seed=seed, rate=1.0)
+
+
+# -- spec validation ---------------------------------------------------------
+
+
+def test_canonical_specs_validate_and_expose_shape():
+    for name, spec in DAG_SPECS.items():
+        assert make_dag_spec(name) is spec
+        assert spec.topo_order()[0] in spec.roots()
+        assert spec.critical_path_len() >= 1
+    ag = DAG_SPECS["agentic"]
+    assert ag.topo_order() == ["prefill", "decode", "tool_call", "decode2"]
+    assert ag.critical_path_len() == 4
+    assert ag.parents("decode2") == ["tool_call"]
+    assert ag.children("prefill") == ["decode"]
+
+
+def test_unknown_spec_and_stage_raise_shaped_errors():
+    with pytest.raises(ValueError, match=r"unknown dag spec 'nope'.*"
+                                         r"registered.*prefill_decode"):
+        make_dag_spec("nope")
+    with pytest.raises(ValueError, match="unknown stage"):
+        DAG_SPECS["agentic"].stage("missing")
+
+
+def test_spec_rejects_duplicates_dangling_edges_and_self_edges():
+    with pytest.raises(ValueError, match="duplicate stage names"):
+        DagSpec("d", (StageSpec("a", 1), StageSpec("a", 1)))
+    with pytest.raises(ValueError, match="unknown stage"):
+        DagSpec("d", (StageSpec("a", 1),), (("a", "ghost"),))
+    with pytest.raises(ValueError, match="self-edge"):
+        DagSpec("d", (StageSpec("a", 1),), (("a", "a"),))
+    with pytest.raises(ValueError, match="tokens > 0"):
+        StageSpec("a", 0)
+
+
+def test_cycle_raises_shaped_error_naming_members():
+    with pytest.raises(ValueError, match=r"cycle through stages.*'a'.*'b'"):
+        DagSpec("d", (StageSpec("a", 1), StageSpec("b", 1)),
+                (("a", "b"), ("b", "a")))
+
+
+# -- tenants -----------------------------------------------------------------
+
+
+def test_tenant_registry_shaped_errors():
+    reg = default_tenants()
+    with pytest.raises(ValueError, match=r"unknown tenant 'ghost'.*acme"):
+        reg.get("ghost")
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register(Tenant("acme"))
+    with pytest.raises(ValueError, match="weight > 0"):
+        Tenant("t", weight=0)
+    with pytest.raises(ValueError, match="unknown dag spec"):
+        Tenant("t", dag="ghost_spec")
+
+
+def test_dag_fleet_rejects_unregistered_slo_class():
+    with pytest.raises(ValueError, match=r"unknown SLO class \(tenant "
+                                         r"'acme'\) 'interactive'"):
+        _small_fleet(budgets={"batch": 8.0})
+
+
+def test_cell_router_budget_is_strict():
+    f = _small_fleet()
+    with pytest.raises(ValueError, match="unknown SLO class 'nope'"):
+        f.router.budget("nope")
+    assert f.router.budget("interactive") == \
+        DEFAULT_DAG_BUDGETS["interactive"]
+
+
+# -- traces ------------------------------------------------------------------
+
+
+def test_dag_arrivals_deterministic_and_validated():
+    reg = default_tenants()
+    a = dag_arrivals(reg, n_slices=20, seed=3, base="mmpp")
+    b = dag_arrivals(reg, n_slices=20, seed=3, base="mmpp")
+    assert a.arrivals == b.arrivals and a.total == b.total
+    c = dag_arrivals(reg, n_slices=20, seed=4, base="mmpp")
+    assert a.arrivals != c.arrivals
+    for name in {t for sl in a.arrivals for t in sl}:
+        assert name in reg
+    with pytest.raises(ValueError, match="unknown tenant \\(in mix\\)"):
+        dag_arrivals(reg, mix={"ghost": 1.0})
+    with pytest.raises(ValueError, match="at least one tenant"):
+        dag_arrivals(TenantRegistry())
+
+
+# -- frontier property -------------------------------------------------------
+
+
+def _random_dag(n, edge_bits):
+    """A guaranteed-acyclic DAG on n stages: forward edges only."""
+    stages = tuple(StageSpec(f"s{i}", 2) for i in range(n))
+    edges, k = [], 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            if edge_bits & (1 << k):
+                edges.append((f"s{i}", f"s{j}"))
+            k += 1
+    return DagSpec("rand", stages, tuple(edges))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 15 - 1),
+       st.randoms(use_true_random=False))
+def test_frontier_never_ready_before_parents_done(n, edge_bits, rnd):
+    from repro.fleet.dag import DagRequest
+    spec = _random_dag(n, edge_bits)
+    dag = DagRequest(rid=0, tenant="t", slo_class="default", spec=spec,
+                     arrival_slice=0)
+    done = set()
+    while not dag.done:
+        ready = dag.ready_stages()
+        assert ready, f"stalled with pending {dag.state}"
+        for nm in ready:
+            assert dag.state[nm] == PENDING
+            assert all(dag.state[p] == DONE for p in spec.parents(nm))
+        nm = rnd.choice(ready)           # complete one ready stage
+        dag.state[nm] = DONE
+        done.add(nm)
+    assert done == {s.name for s in spec.stages}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 15 - 1))
+def test_random_forward_dags_topo_sort_and_budget(n, edge_bits):
+    spec = _random_dag(n, edge_bits)
+    order = spec.topo_order()
+    pos = {nm: i for i, nm in enumerate(order)}
+    for u, v in spec.edges:
+        assert pos[u] < pos[v]
+    assert 1 <= spec.critical_path_len() <= n
+
+
+# -- end to end --------------------------------------------------------------
+
+
+def test_run_dag_conserves_and_is_deterministic():
+    outs = []
+    for _ in range(2):
+        f = _small_fleet()
+        outs.append(f.run_dag(_small_trace(f)))
+    a, b = outs
+    tr = _small_trace(_small_fleet())
+    assert (len(a.completed) + len(a.rejected)
+            + len(a.unfinished)) == tr.total
+    assert a.assignments == b.assignments       # determinism contract
+    assert a.handoffs == b.handoffs
+    assert [d.latency_ns for d in a.completed] == \
+        [d.latency_ns for d in b.completed]
+    for d in a.completed:
+        assert d.done and d.latency_ns > 0
+        assert set(d.cell_of) == {s.name for s in d.spec.stages}
+
+
+def test_request_level_mode_pins_stages_and_pays_zero_handoffs():
+    f = _small_fleet(stage_affinity=False)
+    res = f.run_dag(_small_trace(f))
+    assert res.handoffs == 0 and res.handoff_energy_pj == 0
+    for d in res.completed:
+        assert len(set(d.cell_of.values())) == 1
+
+
+def test_dag_fleet_pays_zero_extra_lut_builds():
+    subs = ["tpu-pool", "gpu-pool"]
+    pc_plain = api.compiler()
+    api.hierarchical_fleet(subs, n_cells=2, engines_per_cell=1,
+                           compiler=pc_plain)
+    pc = api.compiler()
+    f = api.dag_fleet(subs, n_cells=2, engines_per_cell=1, compiler=pc,
+                      seed=0)
+    assert pc.n_builds == pc_plain.n_builds     # per-variant set only
+    before = pc.n_builds
+    f.run_dag(_small_trace(f))
+    assert pc.n_builds == before                # SS.6 cache: 0 extra
+
+
+def test_stage_cost_reads_lut_without_building():
+    f = _small_fleet()
+    sched = f.cells[0].workers[0].sched
+    t1, e1 = sched.stage_cost(1)
+    t4, e4 = sched.stage_cost(4)
+    assert t1 > 0 and e1 > 0
+    # more tasks -> tighter per-task budget -> faster, hotter placement
+    assert t4 <= t1 and e4 >= e1
+
+
+def test_summarize_applies_to_stage_stream_and_breakdown_sums():
+    f = _small_fleet()
+    res = f.run_dag(_small_trace(f, n_slices=12))
+    s = summarize(res)
+    assert s.n_completed == len(res.stage_result.completed) > 0
+    bd = tenant_breakdown(res, f)
+    assert sum(v["n_submitted"] for v in bd.values()) == \
+        len(res.completed) + len(res.rejected) + len(res.unfinished)
+    for name, row in bd.items():
+        t = f.tenants.get(name)
+        assert row["slo_class"] == t.slo_class and row["dag"] == t.dag
+        assert 0.0 <= row["deadline_miss_rate"] <= 1.0
+
+
+def test_budget_scales_with_critical_path_and_tenant_override():
+    from repro.fleet.dag import DagRequest
+    spec = DAG_SPECS["agentic"]
+    dag = DagRequest(rid=0, tenant="t", slo_class="interactive",
+                     spec=spec, arrival_slice=0)
+    assert dag_budget_slices(dag, 3.0, Tenant("t")) == 3.0 * 4
+    assert dag_budget_slices(dag, 3.0, Tenant("t", budget_slices=1.5)) == \
+        1.5 * 4
+
+
+def test_per_tenant_observability_and_flight_frames():
+    rec = obs.FlightRecorder(capacity=64)
+    obs.enable(flight_recorder=rec)
+    try:
+        f = _small_fleet()
+        res = f.run_dag(_small_trace(f, n_slices=12))
+        counters = obs.metrics().as_dict()["counters"]
+        done = sum(n for k, n in counters.items()
+                   if k.startswith("dag.stage.done{"))
+        assert done == sum(1 for d in res.completed
+                           for _ in d.spec.stages) + sum(
+            1 for d in res.unfinished for s in d.state.values()
+            if s == DONE)
+        admission = {k: n for k, n in counters.items()
+                     if k.startswith("fleet.admission{")}
+        assert admission and all("tenant=" in k for k in admission)
+        if res.rejected:
+            assert any(REASON_TENANT_BUDGET in k for k in admission)
+        assert obs.metrics().value(
+            "dag.request.done", tenant=res.completed[0].tenant) > 0
+        assert len(rec) > 0
+        frame = rec.frames[-1]
+        assert {"tenants", "cells", "running"} <= set(frame)
+        json.dumps(frame)                 # frames stay JSON-serializable
+    finally:
+        obs.reset()
+
+
+def test_background_trace_coexists_with_dags():
+    f = _small_fleet()
+    bg = make_trace("poisson", n_slices=10, seed=1, rate=1.0)
+    res = f.run_dag(_small_trace(f), background=bg)
+    assert res.background_result is not None
+    n_bg = (len(res.background_result.completed)
+            + len(res.background_result.rejected)
+            + len(res.background_result.unfinished))
+    assert n_bg == bg.total
+    # stage stream stays pure StageRequest
+    assert all(r.dag_rid >= 0 for r in res.stage_result.completed)
+
+
+# -- CLI ---------------------------------------------------------------------
+
+
+def test_cli_dag_workload_end_to_end(tmp_path):
+    from repro.launch import fleet as cli
+    out = tmp_path / "summary.json"
+    cli.main(["--workload", "dag:mixed", "--cells", "2", "--engines", "2",
+              "--steps", "8", "--json", str(out)])
+    payload = json.loads(out.read_text())
+    dag = payload["dag"]
+    assert set(dag) >= {"n_completed", "n_rejected", "n_unfinished",
+                        "handoffs", "tenants"}
+    assert set(dag["tenants"]) == {"acme", "batchco", "duo"}
+
+
+def test_cli_shaped_errors_for_unknown_spec_and_bad_tenants():
+    from repro.launch import fleet as cli
+    with pytest.raises(SystemExit, match="unknown dag spec"):
+        cli.main(["--workload", "dag:nope", "--steps", "4"])
+    with pytest.raises(SystemExit, match="--tenants"):
+        cli.main(["--workload", "mmpp", "--tenants", "a:interactive",
+                  "--steps", "4"])

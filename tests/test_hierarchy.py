@@ -110,10 +110,23 @@ def test_batch_class_admitted_deeper_than_interactive():
     assert n_batch > n_interactive    # 4x the budget -> deeper queue
 
 
-def test_unknown_class_inherits_default_budget():
+def test_unknown_class_raises_shaped_error():
     _, router = _one_cell_router(budgets={"batch": 8.0})
-    assert router.budget("nope") == router.budget("default") == 2.0
+    assert router.budget("default") == 2.0
     assert router.budget("batch") == 8.0
+    with pytest.raises(ValueError, match=r"unknown SLO class 'nope'; "
+                                         r"registered: \['batch', "
+                                         r"'default'\]"):
+        router.budget("nope")
+
+
+def test_class_mix_classes_inherit_default_budget():
+    fleet = api.hierarchical_fleet(
+        "tpu-pool", n_cells=1, engines_per_cell=1,
+        class_mix={"interactive": 0.5, "bulk": 0.5},
+        budgets={"interactive": 1.5})
+    assert fleet.router.budget("interactive") == 1.5
+    assert fleet.router.budget("bulk") == 2.0     # inherited slo_slices
 
 
 # -- determinism -------------------------------------------------------------
@@ -252,9 +265,10 @@ def test_hierarchy_flight_frames_carry_cell_aggregates():
                 "recent_miss_rate"} <= set(cell)
         json.dumps(frame)                 # frames stay JSON-serializable
         # the global tier counted admissions under the PR 6 schema
+        # (PR 10 added the tenant label; plain requests carry "-")
         reg = obs.metrics()
         assert reg.value("fleet.admission", decision=ADMIT_ACCEPT,
-                         reason="ok", cls="default") > 0
+                         reason="ok", cls="default", tenant="-") > 0
     finally:
         obs.reset()
 
@@ -267,7 +281,8 @@ def test_reject_reason_code_counted():
         for rid in range(200):
             router.route(FleetRequest(rid=rid, arrival_slice=0))
         n = obs.metrics().value("fleet.admission", decision=ADMIT_REJECT,
-                                reason=REASON_BUDGET, cls="default")
+                                reason=REASON_BUDGET, cls="default",
+                                tenant="-")
         assert n > 0
     finally:
         obs.reset()

@@ -250,7 +250,8 @@ def test_instrumented_fleet_run_produces_spans_and_metrics(tmp_path):
     admits = {k: v for k, v in snap["counters"].items()
               if k.startswith("fleet.admission")}
     assert sum(admits.values()) == s.n_submitted
-    wait = obs.metrics().histogram("fleet.queue_wait_slices", cls="default")
+    wait = obs.metrics().histogram("fleet.queue_wait_slices",
+                                   cls="default", tenant="-")
     assert wait is not None and wait.count == s.n_completed
 
     # frames recorded every slice; miss_rate_threshold=0 always fires once

@@ -121,7 +121,7 @@ def test_fake_quant_straight_through_grad():
                                rtol=1e-6)
 
 
-# -- optimizers ----------------------------------------------------------------
+# -- optimizers ---------------------------------------------------------------
 
 
 @pytest.mark.parametrize("kind", ["adamw", "adamw_bf16", "adafactor"])
@@ -154,7 +154,7 @@ def test_optimizer_state_structure_mirrors_params():
         jax.tree_util.tree_structure(params)
 
 
-# -- gradient compression -------------------------------------------------------
+# -- gradient compression -----------------------------------------------------
 
 
 def test_compression_error_feedback_unbiased():
@@ -186,7 +186,7 @@ def test_compression_single_step_error_bound(seed):
     assert float(jnp.max(jnp.abs(new_err["w"]))) <= scale * 0.5 + 1e-9
 
 
-# -- checkpointing ---------------------------------------------------------------
+# -- checkpointing ------------------------------------------------------------
 
 
 def test_checkpoint_roundtrip(tmp_path):

@@ -79,7 +79,7 @@ def test_trainer_with_compression_converges(tmp_path):
     assert comp["final_loss"] < base["final_loss"] * 1.5 + 0.5
 
 
-# -- serving -------------------------------------------------------------------
+# -- serving ------------------------------------------------------------------
 
 
 def test_decode_engine_serves_batched_requests():

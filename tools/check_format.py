@@ -1,0 +1,103 @@
+"""Local approximation of the CI ``ruff format --check`` gate.
+
+The dev containers this repo grows in do not ship ruff (PR 8 note in
+CHANGES.md), so formatter drift could only be discovered after push.
+This script re-implements the deterministic subset of the drift the
+formatter (line-length 79, ``quote-style = "preserve"``) would flag, so
+the lint job can be kept verifiably green from an offline checkout:
+
+* trailing whitespace / whitespace-only lines (W291/W293),
+* tabs and CRLF line endings,
+* files not ending in exactly one newline,
+* three or more consecutive blank lines (the formatter collapses them),
+* top-level ``def``/``class`` not preceded by two blank lines,
+* lines longer than 79 columns (the formatter's wrap surface - long
+  lines are where ``ruff format --check`` diffs come from),
+* missing space after a comma outside strings/comments (the formatter
+  inserts one).
+
+It is an approximation, not a replacement: CI still runs real ruff.
+Run: ``python tools/check_format.py src tests benchmarks examples tools``
+Exit status 1 when any file drifts; findings print as ``path:line: rule``.
+"""
+from __future__ import annotations
+
+import io
+import sys
+import tokenize
+from pathlib import Path
+
+MAX_LEN = 79
+
+
+def _comma_findings(source: str):
+    """(line, col) of commas not followed by whitespace/closer, skipping
+    string and comment tokens (tokenize gives exact spans)."""
+    out = []
+    lines = source.split("\n")
+    try:
+        toks = list(tokenize.generate_tokens(io.StringIO(source).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return out                       # syntax problems belong to ruff check
+    for tok in toks:
+        if tok.type == tokenize.OP and tok.string == ",":
+            row, col = tok.end
+            line = lines[row - 1]
+            if col < len(line) and line[col] not in " )]},":
+                out.append((row, col))
+    return out
+
+
+def check_file(path: Path):
+    findings = []
+    raw = path.read_bytes()
+    if b"\r" in raw:
+        findings.append((0, "CRLF line ending"))
+    text = raw.decode("utf-8")
+    if text and not text.endswith("\n"):
+        findings.append((0, "missing final newline"))
+    elif text.endswith("\n\n"):
+        findings.append((0, "blank line at end of file"))
+    lines = text.split("\n")
+    blanks = 0
+    for i, ln in enumerate(lines, 1):
+        if ln != ln.rstrip():
+            findings.append((i, "trailing whitespace"))
+        if "\t" in ln:
+            findings.append((i, "tab character"))
+        if len(ln) > MAX_LEN:
+            findings.append((i, f"line too long ({len(ln)} > {MAX_LEN})"))
+        if not ln.strip():
+            blanks += 1
+            if blanks == 3:
+                findings.append((i, "more than two consecutive blank lines"))
+        else:
+            if (ln.startswith(("def ", "class ", "@"))
+                    and i > 1 and 0 < blanks < 2
+                    and not lines[i - 2 - blanks].startswith(("@", "#"))):
+                findings.append(
+                    (i, "expected two blank lines before top-level def"))
+            blanks = 0
+    for row, col in _comma_findings(text):
+        findings.append((row, f"missing whitespace after comma (col {col})"))
+    return findings
+
+
+def main(argv=None) -> int:
+    roots = (argv if argv is not None else sys.argv[1:]) or ["src", "tests"]
+    n_bad = 0
+    for root in roots:
+        paths = ([Path(root)] if Path(root).suffix == ".py"
+                 else sorted(Path(root).rglob("*.py")))
+        for p in paths:
+            for line, rule in check_file(p):
+                print(f"{p}:{line}: {rule}")
+                n_bad += 1
+    if n_bad:
+        print(f"format approximation: {n_bad} finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
